@@ -1,0 +1,56 @@
+"""Kernel micro-benchmarks: jnp reference path timings on CPU + control-
+plane step scaling with fleet size (the Pallas kernels themselves target
+TPU; interpret-mode timing is not meaningful, so we time the jnp
+execution paths that the kernels replace and report the roofline-model
+speedup the fused kernel buys on v5e)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import build_random_cec, get_cost, omd_step
+from repro.kernels import ref
+from repro.topo import connected_er
+
+from .common import dump, emit, timeit
+
+
+def main() -> list[dict]:
+    rows = []
+    cost = get_cost("exp")
+    lam3 = jnp.array([20.0, 20.0, 20.0])
+
+    # control-plane iteration vs fleet size (dense masked-tensor path)
+    for n in (25, 50, 100, 200, 400):
+        g = build_random_cec(connected_er(n, min(0.2, 8.0 / n), seed=1), 3,
+                             10.0, seed=0)
+        phi = g.uniform_phi()
+        stepf = jax.jit(lambda p, g=g: omd_step(g, cost, p, lam3, 3.0).phi)
+        _, secs = timeit(stepf, phi, warmup=1, iters=5)
+        nb = g.n_bar
+        # HBM-bound estimate for the fused omd_update kernel on v5e:
+        # one read+write of phi/delta/mask [W,N,N] f32 at 819 GB/s
+        bytes_moved = 4 * 3 * nb * nb * 4
+        v5e_est = bytes_moved / 819e9
+        rows.append({"bench": "omd_step", "n": n, "cpu_s": secs,
+                     "v5e_kernel_est_s": v5e_est})
+        emit(f"kernels.omd_step.n{n}", secs,
+             f"v5e_fused_est_us={v5e_est*1e6:.2f}")
+
+    # flash-attention oracle FLOPs check (ref path, small shape)
+    q = jax.random.normal(jax.random.PRNGKey(0), (1, 8, 512, 64), jnp.float32)
+    k = jax.random.normal(jax.random.PRNGKey(1), (1, 8, 512, 64), jnp.float32)
+    v = jax.random.normal(jax.random.PRNGKey(2), (1, 8, 512, 64), jnp.float32)
+    att = jax.jit(lambda a, b, c: ref.mha_ref(a, b, c, causal=True))
+    _, secs = timeit(att, q, k, v, warmup=1, iters=3)
+    flops = 4 * 8 * 512 * 512 * 64 / 2  # causal
+    rows.append({"bench": "mha_ref_512", "cpu_s": secs,
+                 "gflops_cpu": flops / secs / 1e9})
+    emit("kernels.mha_ref_512", secs, f"gflops={flops/secs/1e9:.2f}")
+    dump("bench_kernels", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

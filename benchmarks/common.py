@@ -1,0 +1,30 @@
+"""Shared benchmark utilities: timing, CSV emission, artifact dump."""
+from __future__ import annotations
+
+import json
+import pathlib
+import time
+
+ART = pathlib.Path("experiments/paper")
+
+
+def timeit(fn, *args, warmup: int = 1, iters: int = 3):
+    """(result, seconds-per-call) with block_until_ready semantics."""
+    import jax
+
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    return out, (time.perf_counter() - t0) / iters
+
+
+def emit(name: str, seconds: float, derived: str):
+    print(f"{name},{seconds*1e6:.1f},{derived}")
+
+
+def dump(name: str, obj):
+    ART.mkdir(parents=True, exist_ok=True)
+    (ART / f"{name}.json").write_text(json.dumps(obj, indent=1))

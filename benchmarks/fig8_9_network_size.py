@@ -1,0 +1,45 @@
+"""Paper Figs. 8–9: total cost and running time vs network size n."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (build_random_cec, frank_wolfe_routing, get_cost,
+                        solve_routing, solve_routing_sgp)
+from repro.topo import connected_er
+
+from .common import dump, emit, timeit
+
+LAM = jnp.array([20.0, 20.0, 20.0])
+ITERS = 50
+
+
+def main() -> list[dict]:
+    cost = get_cost("exp")
+    rows = []
+    for n in (20, 25, 30, 35, 40):
+        g = build_random_cec(connected_er(n, 0.2, seed=1), 3, 10.0, seed=0)
+        phi0 = g.uniform_phi()
+        omd = jax.jit(lambda p, g=g: solve_routing(g, cost, LAM, p, 3.0, ITERS))
+        sgp = jax.jit(lambda p, g=g: solve_routing_sgp(g, cost, LAM, p, 0.5,
+                                                       ITERS))
+        (_, tr_o), t_o = timeit(omd, phi0)
+        (_, tr_s), t_s = timeit(sgp, phi0)
+        t0 = time.perf_counter()
+        _, d_opt = frank_wolfe_routing(g, cost, LAM, n_iters=150)
+        t_opt = time.perf_counter() - t0
+        row = {"n": n, "omd_cost": float(tr_o[-1]), "sgp_cost": float(tr_s[-1]),
+               "opt_cost": d_opt, "omd_s": t_o, "sgp_s": t_s, "opt_s": t_opt}
+        rows.append(row)
+        emit(f"fig8_9.n{n}.omd", t_o, f"cost={tr_o[-1]:.3f};opt={d_opt:.3f}")
+        emit(f"fig8_9.n{n}.sgp", t_s, f"cost={tr_s[-1]:.3f}")
+        emit(f"fig8_9.n{n}.opt_fw", t_opt, f"cost={d_opt:.3f}")
+    dump("fig8_9_network_size", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,41 @@
+"""Benchmark harness: one module per paper table/figure.
+
+``PYTHONPATH=src python -m benchmarks.run [--only fig7,...]``
+prints ``name,us_per_call,derived`` CSV rows and writes JSON artifacts to
+experiments/paper/ (consumed by EXPERIMENTS.md).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+MODULES = ("fig7_routing_convergence", "fig8_9_network_size",
+           "fig10_utility_functions", "fig11_single_loop",
+           "table2_topologies", "bench_kernels", "perf_iterations")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="")
+    args = ap.parse_args()
+    only = {s.strip() for s in args.only.split(",") if s.strip()}
+
+    print("name,us_per_call,derived")
+    failed = []
+    for mod in MODULES:
+        if only and not any(mod.startswith(o) for o in only):
+            continue
+        try:
+            m = __import__(f"benchmarks.{mod}", fromlist=["main"])
+            m.main()
+        except Exception as e:  # noqa: BLE001
+            failed.append((mod, repr(e)))
+            traceback.print_exc()
+    if failed:
+        print("FAILED:", failed, file=sys.stderr)
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,14 @@
+"""End-to-end CEC inference serving (the paper's deployment scenario):
+three LM versions on an edge fleet, OMAD steering admission + routing
+online from measured feedback, real decode steps on CPU.
+
+    PYTHONPATH=src python examples/cec_serving.py
+"""
+import sys
+
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    sys.argv = [sys.argv[0], "--intervals", "8", "--requests", "18",
+                "--nodes", "12", "--fail-node-at", "5"]
+    main()

@@ -1,0 +1,15 @@
+"""Fault-tolerant LM training end-to-end: deterministic data pipeline,
+AdamW, checkpoint/restart, a simulated mid-run failure with retry.
+
+    PYTHONPATH=src python examples/train_lm.py
+(drop --smoke inside for the full 135M smollm config on real hardware)
+"""
+import sys
+
+from repro.launch.train import main
+
+if __name__ == "__main__":
+    sys.argv = [sys.argv[0], "--smoke", "--steps", "80", "--ckpt-every",
+                "25", "--fail-at", "11", "--ckpt-dir",
+                "checkpoints/example_train"]
+    main()

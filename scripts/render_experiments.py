@@ -1,0 +1,83 @@
+"""Render EXPERIMENTS.md §Dry-run/§Roofline tables from the JSON artifacts.
+
+The narrative sections (§Repro, §Perf iteration log) are maintained by hand
+in EXPERIMENTS.md between the AUTOGEN markers this script rewrites.
+
+    PYTHONPATH=src python scripts/render_experiments.py
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import re
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.roofline.analysis import render_table  # noqa: E402
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+
+def dryrun_table() -> str:
+    rows = []
+    for f in sorted((ROOT / "experiments/dryrun").glob("*.json")):
+        r = json.loads(f.read_text())
+        if r.get("status") == "skipped":
+            rows.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                        f"skipped ({r['reason']}) | — | — | — |")
+            continue
+        coll = {k: int(v["count"]) for k, v in r["collectives"].items()
+                if k != "total"}
+        # donated outputs alias inputs: resident = args + (out − aliased)
+        mem = (r["arg_bytes_per_device"] + r["output_bytes_per_device"]
+               - r.get("alias_bytes_per_device", 0)) / 2**30
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+            f"ok ({r['compile_s']}s) | {mem:.2f} | "
+            f"{r['temp_bytes_per_device']/2**30:.2f} | {coll} |")
+    head = ("| arch | shape | mesh | compile | args+out GiB/dev | "
+            "temp GiB/dev | collectives |\n|---|---|---|---|---|---|---|")
+    return head + "\n" + "\n".join(rows)
+
+
+def perf_table() -> str:
+    f = ROOT / "experiments/paper/perf_iterations.json"
+    if not f.exists():
+        return "(perf run pending)"
+    rows = ["| cell | variant | compute ms | memory ms | collective ms | "
+            "bottleneck | roofline frac | verdict |",
+            "|---|---|---|---|---|---|---|---|"]
+    for r in json.loads(f.read_text()):
+        rows.append(
+            f"| {r['arch']} × {r['shape']} | {r['variant']} | "
+            f"{r['compute_s']*1e3:.2f} | {r['memory_s']*1e3:.2f} | "
+            f"{r['collective_s']*1e3:.2f} | {r['bottleneck']} | "
+            f"{r['roofline_fraction']:.3f} | {r.get('verdict', '—')} |")
+    return "\n".join(rows)
+
+
+def replace_block(text: str, tag: str, body: str) -> str:
+    pat = re.compile(rf"<!-- AUTOGEN:{tag} -->.*?<!-- /AUTOGEN:{tag} -->",
+                     re.S)
+    repl = f"<!-- AUTOGEN:{tag} -->\n{body}\n<!-- /AUTOGEN:{tag} -->"
+    assert pat.search(text), f"missing AUTOGEN block {tag}"
+    return pat.sub(repl, text)
+
+
+def main() -> None:
+    md = (ROOT / "EXPERIMENTS.md").read_text()
+    md = replace_block(md, "dryrun", dryrun_table())
+    md = replace_block(md, "roofline_baseline",
+                       render_table(str(ROOT / "experiments/roofline"),
+                                    adjusted=False))
+    md = replace_block(md, "roofline_adjusted",
+                       render_table(str(ROOT / "experiments/roofline"),
+                                    adjusted=True))
+    md = replace_block(md, "perf", perf_table())
+    (ROOT / "EXPERIMENTS.md").write_text(md)
+    print("EXPERIMENTS.md updated")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,38 @@
+"""The paper's own evaluation scenario (§IV Experiment Setup).
+
+Connected-ER(25, 0.2), 3 DNN model versions, total input rate λ=60,
+link capacities U[0, 2·C̄] with C̄=10, exp link cost, log utilities.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class CECScenario:
+    n_nodes: int = 25
+    er_p: float = 0.2
+    n_versions: int = 3
+    lam_total: float = 60.0
+    mean_link_capacity: float = 10.0
+    cost_name: str = "exp"
+    utility_kind: str = "log"
+    delta: float = 0.5
+    eta_outer: float = 0.05
+    eta_inner: float = 3.0
+
+
+PAPER = CECScenario()
+
+
+def build(scenario: CECScenario = PAPER, seed: int = 1):
+    """(graph, utility bank) for the scenario."""
+    from repro.core import build_random_cec, make_bank
+    from repro.topo import connected_er
+
+    adj = connected_er(scenario.n_nodes, scenario.er_p, seed=seed)
+    graph = build_random_cec(adj, scenario.n_versions,
+                             scenario.mean_link_capacity, seed=0)
+    bank = make_bank(scenario.utility_kind, scenario.n_versions, seed=0,
+                     lam_total=scenario.lam_total)
+    return graph, bank

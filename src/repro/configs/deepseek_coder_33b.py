@@ -1,0 +1,16 @@
+"""Assigned architecture config — see the source tag on CONFIG.
+
+FULL config is exercised only via the multi-pod dry-run (no allocation);
+SMOKE is the reduced same-family config used in CPU tests.
+"""
+from repro.models.config import ModelConfig, MoEConfig
+
+CONFIG = ModelConfig(
+    name="deepseek-coder-33b", n_layers=62, d_model=7168, n_heads=56,
+    n_kv_heads=8, d_ff=19200, vocab=32256,
+    period=(("attn", "dense"),), rope_theta=100000.0,
+    source="arXiv:2401.14196; hf (llama-arch dense, GQA kv=8)")
+
+SMOKE = ModelConfig(
+    name="deepseek-coder-33b-smoke", n_layers=2, d_model=64, n_heads=8,
+    n_kv_heads=2, d_ff=160, vocab=256, period=(("attn", "dense"),))

@@ -1,0 +1,16 @@
+"""Assigned architecture config — see the source tag on CONFIG.
+
+FULL config is exercised only via the multi-pod dry-run (no allocation);
+SMOKE is the reduced same-family config used in CPU tests.
+"""
+from repro.models.config import ModelConfig, MoEConfig
+
+CONFIG = ModelConfig(
+    name="granite-3-2b", n_layers=40, d_model=2048, n_heads=32,
+    n_kv_heads=8, d_ff=8192, vocab=49155,
+    period=(("attn", "dense"),), tie_embeddings=True,
+    source="hf:ibm-granite/granite-3.0-2b-base (GQA)")
+
+SMOKE = ModelConfig(
+    name="granite-smoke", n_layers=2, d_model=64, n_heads=8, n_kv_heads=2,
+    d_ff=192, vocab=320, period=(("attn", "dense"),), tie_embeddings=True)

@@ -1,0 +1,25 @@
+"""Assigned architecture config — see the source tag on CONFIG.
+
+FULL config is exercised only via the multi-pod dry-run (no allocation);
+SMOKE is the reduced same-family config used in CPU tests.
+"""
+from repro.models.config import ModelConfig, MoEConfig
+
+_PERIOD = tuple(
+    ("attn" if i == 0 else "mamba", "moe" if i % 2 == 1 else "dense")
+    for i in range(8))
+
+CONFIG = ModelConfig(
+    name="jamba-1.5-large-398b", n_layers=72, d_model=8192, n_heads=64,
+    n_kv_heads=8, d_ff=24576, vocab=65536, period=_PERIOD,
+    moe=MoEConfig(n_experts=16, top_k=2, d_ff_expert=24576),
+    source="arXiv:2403.19887; hf (Mamba+attn 1:7 interleave, MoE 16e top-2)")
+
+_SMOKE_PERIOD = tuple(
+    ("attn" if i == 0 else "mamba", "moe" if i % 2 == 1 else "dense")
+    for i in range(4))
+
+SMOKE = ModelConfig(
+    name="jamba-smoke", n_layers=4, d_model=64, n_heads=4, n_kv_heads=2,
+    d_ff=128, vocab=256, period=_SMOKE_PERIOD,
+    moe=MoEConfig(n_experts=4, top_k=2, d_ff_expert=128), d_state=8)

@@ -1,0 +1,18 @@
+"""Assigned architecture config — see the source tag on CONFIG.
+
+FULL config is exercised only via the multi-pod dry-run (no allocation);
+SMOKE is the reduced same-family config used in CPU tests.
+"""
+from repro.models.config import ModelConfig, MoEConfig
+
+CONFIG = ModelConfig(
+    name="moonshot-v1-16b-a3b", n_layers=48, d_model=2048, n_heads=16,
+    n_kv_heads=16, d_ff=1408, vocab=163840,
+    period=(("attn", "moe"),),
+    moe=MoEConfig(n_experts=64, top_k=6, d_ff_expert=1408, n_shared=2),
+    source="hf:moonshotai/Moonlight-16B-A3B (64e top-6)")
+
+SMOKE = ModelConfig(
+    name="moonshot-smoke", n_layers=2, d_model=64, n_heads=4, n_kv_heads=4,
+    d_ff=96, vocab=256, period=(("attn", "moe"),),
+    moe=MoEConfig(n_experts=8, top_k=6, d_ff_expert=96, n_shared=2))

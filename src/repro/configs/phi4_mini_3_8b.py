@@ -1,0 +1,16 @@
+"""Assigned architecture config — see the source tag on CONFIG.
+
+FULL config is exercised only via the multi-pod dry-run (no allocation);
+SMOKE is the reduced same-family config used in CPU tests.
+"""
+from repro.models.config import ModelConfig, MoEConfig
+
+CONFIG = ModelConfig(
+    name="phi4-mini-3.8b", n_layers=32, d_model=3072, n_heads=24,
+    n_kv_heads=8, d_ff=8192, vocab=200064,
+    period=(("attn", "dense"),),
+    source="arXiv:2412.08905; hf (RoPE SwiGLU GQA)")
+
+SMOKE = ModelConfig(
+    name="phi4-mini-smoke", n_layers=2, d_model=48, n_heads=6,
+    n_kv_heads=2, d_ff=128, vocab=512, period=(("attn", "dense"),))

@@ -1,0 +1,18 @@
+"""Assigned architecture config — see the source tag on CONFIG.
+
+FULL config is exercised only via the multi-pod dry-run (no allocation);
+SMOKE is the reduced same-family config used in CPU tests.
+"""
+from repro.models.config import ModelConfig, MoEConfig
+
+CONFIG = ModelConfig(
+    name="qwen2-moe-a2.7b", n_layers=24, d_model=2048, n_heads=16,
+    n_kv_heads=16, d_ff=1408, vocab=151936,
+    period=(("attn", "moe"),),
+    moe=MoEConfig(n_experts=60, top_k=4, d_ff_expert=1408, n_shared=4),
+    source="hf:Qwen/Qwen1.5-MoE-A2.7B (4 shared + 60 routed top-4)")
+
+SMOKE = ModelConfig(
+    name="qwen2-moe-smoke", n_layers=2, d_model=64, n_heads=4, n_kv_heads=4,
+    d_ff=96, vocab=256, period=(("attn", "moe"),),
+    moe=MoEConfig(n_experts=8, top_k=4, d_ff_expert=96, n_shared=2))

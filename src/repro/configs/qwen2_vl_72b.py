@@ -1,0 +1,18 @@
+"""Assigned architecture config — see the source tag on CONFIG.
+
+FULL config is exercised only via the multi-pod dry-run (no allocation);
+SMOKE is the reduced same-family config used in CPU tests.
+"""
+from repro.models.config import ModelConfig, MoEConfig
+
+CONFIG = ModelConfig(
+    name="qwen2-vl-72b", n_layers=80, d_model=8192, n_heads=64,
+    n_kv_heads=8, d_ff=29568, vocab=152064,
+    period=(("attn", "dense"),), rope="mrope", frontend="vision",
+    mrope_sections=(16, 24, 24),
+    source="arXiv:2409.12191; hf (M-RoPE, vision tower stubbed)")
+
+SMOKE = ModelConfig(
+    name="qwen2-vl-smoke", n_layers=2, d_model=64, n_heads=4, n_kv_heads=2,
+    d_ff=128, vocab=256, period=(("attn", "dense"),), rope="mrope",
+    frontend="vision", mrope_sections=(2, 3, 3))

@@ -1,0 +1,35 @@
+"""Assigned input shapes (one set, shared by all 10 LM-family archs).
+
+  train_4k     train_step   seq 4096,   global_batch 256
+  prefill_32k  prefill      seq 32768,  global_batch 32
+  decode_32k   decode_step  KV 32768,   global_batch 128
+  long_500k    decode_step  KV 524288,  global_batch 1   (sub-quadratic only)
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    kind: str          # 'train' | 'prefill' | 'decode'
+    seq_len: int
+    global_batch: int
+
+
+SHAPES = {
+    "train_4k": ShapeSpec("train_4k", "train", 4_096, 256),
+    "prefill_32k": ShapeSpec("prefill_32k", "prefill", 32_768, 32),
+    "decode_32k": ShapeSpec("decode_32k", "decode", 32_768, 128),
+    "long_500k": ShapeSpec("long_500k", "decode", 524_288, 1),
+}
+
+
+def applicable(cfg: ModelConfig, shape: str) -> tuple[bool, str]:
+    """(runs?, reason).  long_500k needs sub-quadratic decode (DESIGN.md §6)."""
+    if shape == "long_500k" and not cfg.sub_quadratic:
+        return False, "full-attention arch: 512k dense decode skipped"
+    return True, ""

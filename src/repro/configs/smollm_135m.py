@@ -1,0 +1,16 @@
+"""Assigned architecture config — see the source tag on CONFIG.
+
+FULL config is exercised only via the multi-pod dry-run (no allocation);
+SMOKE is the reduced same-family config used in CPU tests.
+"""
+from repro.models.config import ModelConfig, MoEConfig
+
+CONFIG = ModelConfig(
+    name="smollm-135m", n_layers=30, d_model=576, n_heads=9,
+    n_kv_heads=3, d_ff=1536, vocab=49152,
+    period=(("attn", "dense"),), tie_embeddings=True,
+    source="hf:HuggingFaceTB/SmolLM-135M (llama-arch small)")
+
+SMOKE = ModelConfig(
+    name="smollm-smoke", n_layers=2, d_model=48, n_heads=3, n_kv_heads=3,
+    d_ff=128, vocab=256, period=(("attn", "dense"),), tie_embeddings=True)

@@ -1,0 +1,19 @@
+"""Assigned architecture config — see the source tag on CONFIG.
+
+FULL config is exercised only via the multi-pod dry-run (no allocation);
+SMOKE is the reduced same-family config used in CPU tests.
+"""
+from repro.models.config import ModelConfig, MoEConfig
+
+CONFIG = ModelConfig(
+    name="whisper-large-v3", n_layers=32, d_model=1280, n_heads=20,
+    n_kv_heads=20, d_ff=5120, vocab=51866,
+    period=(("attn", "dense"),), enc_dec=True, n_enc_layers=32,
+    enc_seq=1500, frontend="audio", rope="none", norm="ln", mlp_act="gelu",
+    source="arXiv:2212.04356 (enc-dec, conv frontend stubbed)")
+
+SMOKE = ModelConfig(
+    name="whisper-smoke", n_layers=2, d_model=64, n_heads=4, n_kv_heads=4,
+    d_ff=128, vocab=256, period=(("attn", "dense"),), enc_dec=True,
+    n_enc_layers=2, enc_seq=32, frontend="audio", rope="none", norm="ln",
+    mlp_act="gelu")

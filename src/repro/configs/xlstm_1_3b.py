@@ -1,0 +1,20 @@
+"""Assigned architecture config — see the source tag on CONFIG.
+
+FULL config is exercised only via the multi-pod dry-run (no allocation);
+SMOKE is the reduced same-family config used in CPU tests.
+"""
+from repro.models.config import ModelConfig, MoEConfig
+
+_PERIOD = tuple(("slstm" if i == 0 else "mlstm", "none") for i in range(8))
+
+CONFIG = ModelConfig(
+    name="xlstm-1.3b", n_layers=48, d_model=2048, n_heads=4,
+    n_kv_heads=4, d_ff=0, vocab=50304, period=_PERIOD,
+    source="arXiv:2405.04517 (sLSTM + mLSTM blocks, 7:1)")
+
+_SMOKE_PERIOD = tuple(("slstm" if i == 0 else "mlstm", "none")
+                      for i in range(2))
+
+SMOKE = ModelConfig(
+    name="xlstm-smoke", n_layers=4, d_model=64, n_heads=2, n_kv_heads=2,
+    d_ff=0, vocab=256, period=_SMOKE_PERIOD)

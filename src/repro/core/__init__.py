@@ -1,0 +1,23 @@
+"""Core CEC control plane: the paper's JOWR contribution in JAX."""
+from .allocation import JOWRResult, allocation_kkt_residual, gs_oma
+from .costs import CostFn, get as get_cost
+from .flow import cost_and_state, link_flows, propagate, total_cost
+from .graph import CECGraph, InfeasibleTopology, build_augmented, build_random_cec
+from .jowr import solve_jowr
+from .marginal import marginals, phi_gradient
+from .opt_baseline import exact_gradient_allocation, frank_wolfe_routing
+from .routing import (RoutingState, kkt_residual, omd_step,
+                      project_simplex_masked, sgp_step, solve_routing,
+                      solve_routing_sgp)
+from .single_loop import omad
+from .utility import UtilityBank, make_bank
+
+__all__ = [
+    "JOWRResult", "allocation_kkt_residual", "gs_oma", "CostFn", "get_cost",
+    "cost_and_state", "link_flows", "propagate", "total_cost", "CECGraph",
+    "InfeasibleTopology", "build_augmented", "build_random_cec", "solve_jowr",
+    "marginals", "phi_gradient", "exact_gradient_allocation",
+    "frank_wolfe_routing", "RoutingState", "kkt_residual", "omd_step",
+    "project_simplex_masked", "sgp_step", "solve_routing",
+    "solve_routing_sgp", "omad", "UtilityBank", "make_bank",
+]

@@ -1,0 +1,117 @@
+"""Workload allocation under unknown utilities: GS-OMA (paper Alg. 1).
+
+Outer loop over t: for each session w, the controller *admits* the perturbed
+allocations Λ ± δ·e_w, lets the routing layer serve them (the oracle 𝔒 =
+OMD-RT, Assumption 4), and observes the resulting scalar network utilities
+U± — two-point gradient sampling (Flaxman et al.).  The estimated gradient
+feeds an online mirror-ascent step on the scaled simplex {Σλ_w = λ}
+(eq. (10)), followed by the box projection P_[δ,λ−δ].
+
+The same engine with ``inner_iters=1`` *is* the single-loop OMAD algorithm
+(Alg. 3): the routing iterate φ is carried across all oracle invocations and
+improves by exactly one mirror-descent step per observation, never waiting
+for inner convergence (see single_loop.py).
+
+Everything scans under jit — T outer iterations × W sessions × 2 oracle
+calls × K routing steps with zero Python in the loop.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .costs import CostFn
+from .flow import total_cost
+from .graph import CECGraph
+from .routing import solve_routing
+from .utility import UtilityBank
+
+Array = jnp.ndarray
+
+
+class JOWRResult(NamedTuple):
+    lam: Array          # [W] final allocation Λ
+    phi: Array          # [W, Nb, Nb] final routing
+    utility_traj: Array  # [T] observed network utility U(Λ^t, φ^t)
+    lam_traj: Array     # [T, W]
+
+
+def _observe(graph: CECGraph, cost: CostFn, bank: UtilityBank, lam: Array,
+             phi: Array, eta_inner: float, inner_iters: int):
+    """Admit Λ, run the routing oracle, observe U = Σu_w − ΣD_ij."""
+    phi, _ = solve_routing(graph, cost, lam, phi, eta_inner, inner_iters)
+    U = bank.total(lam) - total_cost(graph, cost, phi, lam)
+    return U, phi
+
+
+def _project_box_simplex(lam: Array, lam_total: float, delta: float) -> Array:
+    """P_[δ,λ−δ] (Alg. 1 line 9) then restore Σλ_w = λ (DESIGN.md §8.3)."""
+    lam = jnp.clip(lam, delta, lam_total - delta)
+    lam = lam * (lam_total / lam.sum())
+    return jnp.clip(lam, delta, lam_total - delta)
+
+
+def gs_oma(
+    graph: CECGraph,
+    cost: CostFn,
+    bank: UtilityBank,
+    lam_total: float,
+    *,
+    delta: float = 0.5,
+    eta_outer: float = 0.05,
+    eta_inner: float = 0.05,
+    outer_iters: int = 100,
+    inner_iters: int = 50,
+    phi0: Array | None = None,
+    lam0: Array | None = None,
+) -> JOWRResult:
+    """Nested-loop solver (Alg. 1); ``inner_iters=1`` gives OMAD (Alg. 3)."""
+    W = graph.n_sessions
+    lam0 = jnp.full((W,), lam_total / W) if lam0 is None else lam0
+    phi0 = graph.uniform_phi() if phi0 is None else phi0
+    eyes = jnp.eye(W)
+
+    def outer(carry, _):
+        lam, phi = carry
+
+        def per_session(c, ew):
+            grads, phi = c
+            up, phi = _observe(graph, cost, bank, lam + delta * ew, phi,
+                               eta_inner, inner_iters)
+            um, phi = _observe(graph, cost, bank, lam - delta * ew, phi,
+                               eta_inner, inner_iters)
+            g = (up - um) / (2.0 * delta)            # Alg. 1 line 6
+            return (grads + g * ew, phi), None
+
+        (g, phi), _ = jax.lax.scan(per_session, (jnp.zeros(W), phi), eyes)
+        # online mirror ascent on the scaled simplex (eq. (10))
+        z = eta_outer * g
+        z = z - z.max()
+        w = lam * jnp.exp(z)
+        lam_new = lam_total * w / w.sum()
+        lam_new = _project_box_simplex(lam_new, lam_total, delta)
+        U_t = bank.total(lam_new) - total_cost(graph, cost, phi, lam_new)
+        return (lam_new, phi), (U_t, lam_new)
+
+    (lam, phi), (u_traj, lam_traj) = jax.lax.scan(
+        outer, (lam0, phi0), None, length=outer_iters)
+    return JOWRResult(lam=lam, phi=phi, utility_traj=u_traj, lam_traj=lam_traj)
+
+
+def allocation_kkt_residual(graph: CECGraph, cost: CostFn, bank: UtilityBank,
+                            lam: Array, phi: Array) -> Array:
+    """Theorem 1 check: ∂U/∂λ_w must be equal across sessions at Λ*.
+
+    Uses the *exact* gradient ∂U/∂λ_w = u'_w(λ_w) − ∂D/∂r_S(w) (only
+    available to tests/benchmarks — the algorithm itself never sees it).
+    """
+    from .flow import cost_and_state
+    from .marginal import marginals
+
+    du = jax.grad(lambda l: bank.per_session(l).sum())(lam)
+    _, t, F = cost_and_state(graph, cost, phi, lam)
+    _, dDdr = marginals(graph, cost, phi, t, F)
+    g = du - dDdr[:, graph.src]
+    return g.max() - g.min()

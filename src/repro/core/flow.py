@@ -1,0 +1,55 @@
+"""Flow propagation and total network cost (paper §II-C/D).
+
+Given routing variables φ (row-stochastic over each node's allowed
+out-edges) and allocation Λ, the per-node session rates are the linear fixed
+point of paper eq. (1)/(2):
+
+    t_j(w) = inject_j(w) + Σ_i t_i(w) · φ_ij(w)
+
+Because φ is loop-free by construction (DAG orientation — see graph.py), the
+fixed point is reached exactly after ``depth_max`` Jacobi relaxation steps,
+implemented as a ``lax.scan`` of masked batched mat-vecs.  This is the
+control-plane hot loop; at fleet scale the same step is served by the Pallas
+``flow_step`` kernel (kernels/flow_step.py) and the W/node axes shard over
+the mesh.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .costs import CostFn
+from .graph import CECGraph
+
+Array = jnp.ndarray
+
+
+def propagate(graph: CECGraph, phi: Array, lam: Array) -> Array:
+    """Session rates t[W, Nb] induced by routing φ and allocation Λ."""
+    inject = graph.injection(lam)
+
+    def step(t, _):
+        return inject + jnp.einsum("wi,wij->wj", t, phi), None
+
+    t, _ = jax.lax.scan(step, inject, None, length=graph.depth_max)
+    return t
+
+
+def link_flows(graph: CECGraph, phi: Array, t: Array) -> Array:
+    """Total flow per augmented link: F_ij = Σ_w t_i(w)·φ_ij(w) (eq. (4))."""
+    return jnp.einsum("wi,wij->ij", t, phi)
+
+
+def total_cost(graph: CECGraph, cost: CostFn, phi: Array, lam: Array) -> Array:
+    """Σ_{(i,j)∈Ē} D_ij(F_ij, C_ij): communication + computation cost."""
+    t = propagate(graph, phi, lam)
+    F = link_flows(graph, phi, t)
+    return jnp.sum(graph.edge_mask * cost.value(F, graph.capacity))
+
+
+def cost_and_state(graph: CECGraph, cost: CostFn, phi: Array, lam: Array):
+    """(total cost, t, F) in one pass — used by the routing iteration."""
+    t = propagate(graph, phi, lam)
+    F = link_flows(graph, phi, t)
+    D = jnp.sum(graph.edge_mask * cost.value(F, graph.capacity))
+    return D, t, F

@@ -1,0 +1,219 @@
+"""Augmented CEC flow graph (paper §II-A, §II-C).
+
+Builds the augmented graph Ḡ = (N̄, Ē) from a physical topology:
+
+* a virtual source ``S`` (the admission controller) with edges to every
+  device deploying the *smallest* model version ``D(1)`` (paper §II-C);
+* one virtual sink ``D_w`` per model version ``w`` with edges from every
+  device in ``D(w)``;  the computation cost of node ``i`` becomes the link
+  cost of the virtual edge ``(i, D_w)`` (paper eq. (6)).
+
+Loop-freedom (required by Gallager routing variables) is enforced
+structurally: physical edges are oriented along a BFS-layer total order from
+``S``, so any row-stochastic φ is automatically loop-free and the flow
+propagation fixed point is reached in ≤ ``depth_max`` relaxation steps
+(DESIGN.md §3).  Per-session edge masks additionally encode:
+
+* nodes in ``D(w)`` forward session ``w`` only to ``D_w`` (paper constr. (3):
+  a deploying node processes, never relays, its own session);
+* edges are kept only if the head can still reach ``D_w`` ("useful" nodes),
+  so every unit of admitted traffic provably drains into its sink.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import numpy as np
+import jax.numpy as jnp
+
+
+class InfeasibleTopology(RuntimeError):
+    """Raised when some session has no S→D_w path in the oriented DAG."""
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class CECGraph:
+    """Static description of the augmented CEC graph.
+
+    Array fields are pytree leaves; scalar metadata is static (hashable) so a
+    ``CECGraph`` can be closed over or passed through ``jax.jit``.
+    """
+
+    # --- data (pytree leaves) ---
+    out_mask: jax.Array      # [W, Nb, Nb] float {0,1}: session-w allowed out-edges
+    edge_mask: jax.Array     # [Nb, Nb]    float {0,1}: union of session masks
+    capacity: jax.Array      # [Nb, Nb]    link/compute capacities (1 where unused)
+    deploy: jax.Array        # [W, N]      bool: node i hosts version w
+    sinks: jax.Array         # [W]         int: index of virtual sink D_w
+    # --- static metadata ---
+    n_phys: int = dataclasses.field(metadata=dict(static=True))
+    n_sessions: int = dataclasses.field(metadata=dict(static=True))
+    n_bar: int = dataclasses.field(metadata=dict(static=True))
+    depth_max: int = dataclasses.field(metadata=dict(static=True))
+    src: int = dataclasses.field(metadata=dict(static=True))
+
+    @property
+    def W(self) -> int:
+        return self.n_sessions
+
+    def uniform_phi(self) -> jax.Array:
+        """Uniform routing over allowed out-edges (Alg. 2 line 1)."""
+        rowsum = self.out_mask.sum(-1, keepdims=True)
+        return self.out_mask / jnp.where(rowsum > 0, rowsum, 1.0)
+
+    def injection(self, lam: jax.Array) -> jax.Array:
+        """[W, Nb] exogenous injection: session w's rate λ_w enters at S."""
+        inject = jnp.zeros((self.n_sessions, self.n_bar), lam.dtype)
+        return inject.at[:, self.src].set(lam)
+
+
+def _bfs_depth(adj: np.ndarray, sources: np.ndarray) -> np.ndarray:
+    n = adj.shape[0]
+    depth = np.full(n, np.inf)
+    depth[sources] = 0.0
+    frontier = list(np.nonzero(sources)[0])
+    d = 0
+    while frontier:
+        d += 1
+        nxt = []
+        for i in frontier:
+            for j in np.nonzero(adj[i])[0]:
+                if depth[j] == np.inf:
+                    depth[j] = d
+                    nxt.append(j)
+        frontier = nxt
+    return depth
+
+
+def build_augmented(
+    adj_undirected: np.ndarray,
+    deploy: np.ndarray,
+    link_capacity: np.ndarray,
+    compute_capacity: np.ndarray,
+    src_capacity: float = 1e4,
+) -> CECGraph:
+    """Build the augmented DAG from a physical topology.
+
+    Args:
+      adj_undirected: [N, N] bool symmetric physical adjacency.
+      deploy: [W, N] bool, exactly one version per node (paper §II-A).
+      link_capacity: [N, N] symmetric positive capacities C_ij.
+      compute_capacity: [N] node compute capacities C_i.
+      src_capacity: capacity of the virtual admission links (S, i).
+    """
+    adj = np.asarray(adj_undirected, bool)
+    deploy = np.asarray(deploy, bool)
+    W, N = deploy.shape
+    if not (deploy.sum(0) == 1).all():
+        raise ValueError("each node must deploy exactly one model version")
+    if (deploy.sum(1) == 0).any():
+        raise InfeasibleTopology("some model version has no deployment")
+
+    src = N
+    sinks = np.arange(W) + N + 1
+    n_bar = N + 1 + W
+
+    # BFS layering from the admission points D(1); S sits at depth -1.
+    d1 = deploy[0]
+    depth = _bfs_depth(adj, d1)
+    if np.isinf(depth).any():
+        raise InfeasibleTopology("physical graph is not connected")
+    # Total order key → DAG orientation (strict, ties broken by index).
+    key = depth * N + np.arange(N)
+    dag = adj & (key[:, None] < key[None, :])
+
+    # usefulness: can node i still deliver session-w traffic to D_w?
+    order = np.argsort(key)                      # topological order of the DAG
+    useful = np.zeros((W, N), bool)
+    for w in range(W):
+        useful[w, deploy[w]] = True
+        for i in order[::-1]:
+            if deploy[w, i]:
+                continue                         # D(w) nodes never relay w
+            useful[w, i] = bool((dag[i] & useful[w]).any())
+
+    out_mask = np.zeros((W, n_bar, n_bar), np.float32)
+    for w in range(W):
+        relay = ~deploy[w]
+        # physical relays: DAG edges whose head is still useful for w
+        m = dag & relay[:, None] & useful[w][None, :]
+        # ... and whose tail can receive w-traffic at all
+        m &= useful[w][:, None]
+        out_mask[w, :N, :N] = m
+        out_mask[w, np.nonzero(deploy[w])[0], sinks[w]] = 1.0  # D(w) → D_w
+        out_mask[w, src, :N] = (d1 & useful[w]).astype(np.float32)  # S → D(1)
+        if out_mask[w, src].sum() == 0:
+            raise InfeasibleTopology(f"session {w} unreachable from S")
+
+    edge_mask = (out_mask.sum(0) > 0).astype(np.float32)
+
+    cap = np.ones((n_bar, n_bar), np.float32)
+    cap[:N, :N] = np.asarray(link_capacity, np.float32)
+    for w in range(W):
+        cap[:N, sinks[w]] = np.asarray(compute_capacity, np.float32)
+    cap[src, :N] = src_capacity
+
+    # longest path in the augmented DAG bounds the relaxation step count
+    akey = np.concatenate([key, [-1.0], key.max() + 1 + np.arange(W)])
+    aorder = np.argsort(akey)
+    any_edge = edge_mask > 0
+    lp = np.zeros(n_bar)
+    for i in aorder:
+        heads = np.nonzero(any_edge[:, i])[0]
+        if heads.size:
+            lp[i] = lp[heads].max() + 1
+    depth_max = int(lp.max()) + 1
+
+    return CECGraph(
+        out_mask=jnp.asarray(out_mask),
+        edge_mask=jnp.asarray(edge_mask),
+        capacity=jnp.asarray(cap),
+        deploy=jnp.asarray(deploy),
+        sinks=jnp.asarray(sinks),
+        n_phys=N,
+        n_sessions=W,
+        n_bar=n_bar,
+        depth_max=depth_max,
+        src=src,
+    )
+
+
+def random_deployment(n: int, n_versions: int, rng: np.random.Generator) -> np.ndarray:
+    """Random one-version-per-node deployment with every version present."""
+    assign = rng.integers(0, n_versions, size=n)
+    assign[:n_versions] = np.arange(n_versions)    # guarantee coverage
+    rng.shuffle(assign)
+    deploy = np.zeros((n_versions, n), bool)
+    deploy[assign, np.arange(n)] = True
+    return deploy
+
+
+def build_random_cec(
+    adj: np.ndarray,
+    n_versions: int,
+    mean_link_capacity: float,
+    seed: int,
+    mean_compute_capacity: float | None = None,
+    max_tries: int = 50,
+) -> CECGraph:
+    """Randomized capacities + deployment (paper §IV experiment setup).
+
+    Link capacities C_ij ~ U[0, 2·C̄] (floored at 0.05·C̄ for numerical
+    sanity of the exp link cost), retried until the instance is feasible.
+    """
+    n = adj.shape[0]
+    mean_cc = mean_compute_capacity or mean_link_capacity
+    for t in range(max_tries):
+        rng = np.random.default_rng(seed + 1000 * t)
+        cap = rng.uniform(0.05, 2.0, size=(n, n)) * mean_link_capacity
+        cap = np.maximum(cap, cap.T)  # symmetric draw per undirected link
+        comp = rng.uniform(0.5, 1.5, size=n) * mean_cc
+        deploy = random_deployment(n, n_versions, rng)
+        try:
+            return build_augmented(adj, deploy, cap, comp)
+        except InfeasibleTopology:
+            continue
+    raise InfeasibleTopology(f"no feasible instance after {max_tries} tries")

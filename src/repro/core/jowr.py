@@ -1,0 +1,45 @@
+"""High-level JOWR API — the paper's contribution behind one call.
+
+``solve_jowr`` is the composable entry point used by examples, benchmarks
+and the serving engine's CEC router: pick a topology, a cost model, a
+(black-box) utility bank, and a method.
+"""
+from __future__ import annotations
+
+from typing import Literal
+
+from . import costs as _costs
+from .allocation import JOWRResult, gs_oma
+from .graph import CECGraph
+from .single_loop import omad
+from .utility import UtilityBank
+
+Method = Literal["nested", "single"]
+
+
+def solve_jowr(
+    graph: CECGraph,
+    bank: UtilityBank,
+    lam_total: float,
+    *,
+    method: Method = "single",
+    cost_name: str = "exp",
+    delta: float = 0.5,
+    eta_outer: float = 0.05,
+    eta_inner: float = 0.05,
+    outer_iters: int = 100,
+    inner_iters: int = 50,
+    phi0=None,
+    lam0=None,
+) -> JOWRResult:
+    cost = _costs.get(cost_name)
+    if method == "nested":
+        return gs_oma(graph, cost, bank, lam_total, delta=delta,
+                      eta_outer=eta_outer, eta_inner=eta_inner,
+                      outer_iters=outer_iters, inner_iters=inner_iters,
+                      phi0=phi0, lam0=lam0)
+    if method == "single":
+        return omad(graph, cost, bank, lam_total, delta=delta,
+                    eta_outer=eta_outer, eta_inner=eta_inner,
+                    outer_iters=outer_iters, phi0=phi0, lam0=lam0)
+    raise ValueError(method)

@@ -1,0 +1,149 @@
+"""Centralized baselines (paper §IV "OPT").
+
+* ``frank_wolfe_routing`` — global optimum of the routing problem 𝒫2 by
+  Frank–Wolfe in session-flow space: the linear subproblem is a shortest
+  path per session w.r.t. the current marginal link costs (classic convex
+  traffic assignment), the step is an exact 1-D bisection line search.
+  This plays the paper's "OPT: centralized convex solver" role and is an
+  *independent* method used to validate OMD-RT's optimum.
+
+* ``exact_gradient_allocation`` — the allocation optimum computed with the
+  *true* utility gradient ∂U/∂λ_w = u'_w(λ_w) − ∂D/∂r_S(w) (Theorem 1):
+  what a genie with known utilities would do.  Used as the U* reference
+  line for Fig. 10/11 reproductions.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from .costs import CostFn
+from .flow import cost_and_state, propagate
+from .graph import CECGraph
+from .marginal import marginals
+from .routing import solve_routing
+from .utility import UtilityBank
+
+
+def _topo_order(edge_mask: np.ndarray) -> list[int]:
+    n = edge_mask.shape[0]
+    indeg = (edge_mask > 0).sum(0)
+    stack = [i for i in range(n) if indeg[i] == 0]
+    order = []
+    while stack:
+        i = stack.pop()
+        order.append(i)
+        for j in np.nonzero(edge_mask[i])[0]:
+            indeg[j] -= 1
+            if indeg[j] == 0:
+                stack.append(int(j))
+    assert len(order) == n, "graph has a cycle"
+    return order
+
+
+def _shortest_path_flow(graph, out_mask_w: np.ndarray, weights: np.ndarray,
+                        order: list[int], src: int, sink: int,
+                        rate: float) -> np.ndarray:
+    """All-or-nothing assignment of ``rate`` along the min-marginal path."""
+    n = out_mask_w.shape[0]
+    dist = np.full(n, np.inf)
+    pred = np.full(n, -1)
+    dist[src] = 0.0
+    for i in order:
+        if not np.isfinite(dist[i]):
+            continue
+        row = out_mask_w[i] > 0
+        cand = dist[i] + weights[i]
+        upd = row & (cand < dist)
+        dist[upd] = cand[upd]
+        pred[upd] = i
+    assert np.isfinite(dist[sink]), "sink unreachable"
+    f = np.zeros_like(weights)
+    j = sink
+    while j != src:
+        i = int(pred[j])
+        f[i, j] = rate
+        j = i
+    return f
+
+
+def frank_wolfe_routing(graph: CECGraph, cost: CostFn, lam,
+                        n_iters: int = 300) -> tuple[np.ndarray, float]:
+    """Global routing optimum; returns (session flows f[W,Nb,Nb], cost D*)."""
+    out_mask = np.asarray(graph.out_mask)
+    edge_mask = np.asarray(graph.edge_mask)
+    cap = np.asarray(graph.capacity)
+    lam = np.asarray(lam, np.float64)
+    order = _topo_order(edge_mask)
+    sinks = np.asarray(graph.sinks)
+
+    # feasible start: flows induced by the uniform routing variables
+    phi0 = graph.uniform_phi()
+    t0 = propagate(graph, phi0, jnp.asarray(lam, jnp.float32))
+    f = np.asarray(t0[:, :, None] * phi0, np.float64)
+
+    def dcost(F):
+        return np.asarray(cost.deriv(jnp.asarray(F), jnp.asarray(cap))) * edge_mask
+
+    def value(F):
+        return float(jnp.sum(graph.edge_mask
+                             * cost.value(jnp.asarray(F), jnp.asarray(cap))))
+
+    for _ in range(n_iters):
+        F = f.sum(0)
+        m = dcost(F)
+        s = np.stack([
+            _shortest_path_flow(graph, out_mask[w], m, order, graph.src,
+                                int(sinks[w]), float(lam[w]))
+            for w in range(graph.n_sessions)
+        ])
+        d = s - f
+        G = d.sum(0)
+        # exact line search on the 1-D convex restriction
+        def slope(gam):
+            return float((dcost(F + gam * G) * G).sum())
+        if slope(0.0) >= -1e-12:
+            break
+        if slope(1.0) <= 0.0:
+            gam = 1.0
+        else:
+            lo, hi = 0.0, 1.0
+            for _ in range(40):
+                mid = 0.5 * (lo + hi)
+                if slope(mid) > 0:
+                    hi = mid
+                else:
+                    lo = mid
+            gam = 0.5 * (lo + hi)
+        f = f + gam * d
+    return f, value(f.sum(0))
+
+
+def exact_gradient_allocation(
+    graph: CECGraph, cost: CostFn, bank: UtilityBank, lam_total: float,
+    *, eta: float = 0.05, outer_iters: int = 300, inner_iters: int = 100,
+    eta_inner: float = 0.05,
+) -> tuple[jnp.ndarray, jnp.ndarray, float]:
+    """Genie allocation via true gradients; returns (Λ*, φ*, U*)."""
+    W = graph.n_sessions
+    lam = jnp.full((W,), lam_total / W)
+    phi = graph.uniform_phi()
+    du_fn = jax.grad(lambda l: bank.per_session(l).sum())
+
+    @jax.jit
+    def step(lam, phi):
+        phi, _ = solve_routing(graph, cost, lam, phi, eta_inner, inner_iters)
+        D, t, F = cost_and_state(graph, cost, phi, lam)
+        _, dDdr = marginals(graph, cost, phi, t, F)
+        g = du_fn(lam) - dDdr[:, graph.src]          # Theorem 1 gradient
+        z = eta * (g - g.max())
+        w = lam * jnp.exp(z)
+        lam = lam_total * w / w.sum()
+        U = bank.total(lam) - D
+        return lam, phi, U
+
+    U = jnp.asarray(0.0)
+    for _ in range(outer_iters):
+        lam, phi, U = step(lam, phi)
+    return lam, phi, float(U)

@@ -1,0 +1,33 @@
+"""OMAD — the single-loop algorithm (paper Alg. 3, Theorem 5).
+
+Identical control flow to GS-OMA except the oracle is invoked with K = 1:
+every utility observation advances the shared routing iterate φ̃ by exactly
+one online-mirror-descent step, so allocation (ascent) and routing (descent)
+move simultaneously through the concave–convex saddle landscape (eq. (25)).
+"""
+from __future__ import annotations
+
+from .allocation import JOWRResult, gs_oma
+from .costs import CostFn
+from .graph import CECGraph
+from .utility import UtilityBank
+
+
+def omad(
+    graph: CECGraph,
+    cost: CostFn,
+    bank: UtilityBank,
+    lam_total: float,
+    *,
+    delta: float = 0.5,
+    eta_outer: float = 0.05,
+    eta_inner: float = 0.05,
+    outer_iters: int = 100,
+    phi0=None,
+    lam0=None,
+) -> JOWRResult:
+    return gs_oma(
+        graph, cost, bank, lam_total,
+        delta=delta, eta_outer=eta_outer, eta_inner=eta_inner,
+        outer_iters=outer_iters, inner_iters=1, phi0=phi0, lam0=lam0,
+    )

@@ -1,0 +1,75 @@
+"""Unknown task-utility functions u_w(λ_w) (paper §II-B, Assumptions 1–3).
+
+The allocator never sees these closed forms — it only receives scalar
+observations U(Λ, φ) (bandit feedback), exactly the paper's information
+structure.  The four families match the paper's §IV evaluation:
+
+  linear     u = a·λ
+  sqrt       u = a·(√(λ + b) − √b)
+  quadratic  u = −a·λ² + b·λ     (params chosen monotone on [0, λ_total])
+  log        u = a·log(b·λ + 1)
+
+All are monotone increasing, concave, Lipschitz and bounded on the domain.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jnp.ndarray
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class UtilityBank:
+    """Per-session utility parameters; ``total(lams)`` is the black box."""
+
+    a: jax.Array                # [W]
+    b: jax.Array                # [W]
+    kind: str = dataclasses.field(metadata=dict(static=True))
+    noise: float = dataclasses.field(default=0.0, metadata=dict(static=True))
+
+    def per_session(self, lam: Array) -> Array:
+        if self.kind == "linear":
+            return self.a * lam
+        if self.kind == "sqrt":
+            return self.a * (jnp.sqrt(lam + self.b) - jnp.sqrt(self.b))
+        if self.kind == "quadratic":
+            return -self.a * lam * lam + self.b * lam
+        if self.kind == "log":
+            return self.a * jnp.log(self.b * lam + 1.0)
+        raise ValueError(self.kind)
+
+    def total(self, lam: Array, key: jax.Array | None = None) -> Array:
+        u = self.per_session(lam).sum()
+        if self.noise > 0.0 and key is not None:
+            u = u + self.noise * jax.random.normal(key, ())
+        return u
+
+
+def make_bank(kind: str, n_sessions: int, seed: int = 0,
+              lam_total: float = 60.0, noise: float = 0.0) -> UtilityBank:
+    """Random monotone-on-domain parameters; larger versions earn more."""
+    rng = np.random.default_rng(seed)
+    base = np.linspace(1.0, 2.0, n_sessions)        # quality ladder
+    if kind == "linear":
+        a = base * rng.uniform(0.8, 1.2, n_sessions) * 2.0
+        b = np.zeros(n_sessions)
+    elif kind == "sqrt":
+        a = base * rng.uniform(4.0, 6.0, n_sessions)
+        b = rng.uniform(0.5, 2.0, n_sessions)
+    elif kind == "quadratic":
+        # monotone on [0, λ]: b ≥ 2·a·λ
+        a = base * rng.uniform(0.01, 0.02, n_sessions)
+        b = 2.0 * a * lam_total + rng.uniform(0.5, 1.5, n_sessions)
+    elif kind == "log":
+        a = base * rng.uniform(15.0, 25.0, n_sessions)
+        b = rng.uniform(0.2, 0.5, n_sessions)
+    else:
+        raise ValueError(kind)
+    return UtilityBank(a=jnp.asarray(a, jnp.float32),
+                       b=jnp.asarray(b, jnp.float32), kind=kind, noise=noise)

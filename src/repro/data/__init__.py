@@ -1,0 +1,3 @@
+from .pipeline import SyntheticLM, batch_for_step
+
+__all__ = ["SyntheticLM", "batch_for_step"]

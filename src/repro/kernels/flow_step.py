@@ -1,0 +1,51 @@
+"""Pallas kernel: one flow-propagation relaxation step (control plane).
+
+t' = inject + t·Φ for all sessions — a batched vector×matrix product, the
+inner-loop hot spot of OMD-RT at fleet scale (N = 10³–10⁵ nodes).  Tiled
+128×128 over Φ with an f32 VMEM accumulator; the session axis is the
+outermost grid dim (shards over the mesh in the distributed control plane).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _flow_kernel(t_ref, phi_ref, inj_ref, o_ref, acc_ref):
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _():
+        acc_ref[...] = inj_ref[...].astype(jnp.float32)
+
+    t = t_ref[...].astype(jnp.float32)           # [1, bk]
+    phi = phi_ref[0].astype(jnp.float32)         # [bk, bj]
+    acc_ref[...] += jax.lax.dot_general(
+        t, phi, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+    @pl.when(ki == pl.num_programs(2) - 1)
+    def _():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def flow_step(t, phi, inject, *, bj: int = 128, bk: int = 128,
+              interpret: bool = False):
+    """t, inject [W, N]; phi [W, N, N] → [W, N].  N multiple of blocks."""
+    W, N = t.shape
+    bj, bk = min(bj, N), min(bk, N)
+    assert N % bj == 0 and N % bk == 0
+    return pl.pallas_call(
+        _flow_kernel,
+        grid=(W, N // bj, N // bk),
+        in_specs=[
+            pl.BlockSpec((1, bk), lambda w, j, k: (w, k)),
+            pl.BlockSpec((1, bk, bj), lambda w, j, k: (w, k, j)),
+            pl.BlockSpec((1, bj), lambda w, j, k: (w, j)),
+        ],
+        out_specs=pl.BlockSpec((1, bj), lambda w, j, k: (w, j)),
+        out_shape=jax.ShapeDtypeStruct((W, N), t.dtype),
+        scratch_shapes=[pltpu.VMEM((1, bj), jnp.float32)],
+        interpret=interpret,
+    )(t, phi, inject)

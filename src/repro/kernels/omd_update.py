@@ -1,0 +1,45 @@
+"""Pallas kernel: fused exponentiated-gradient routing update (eq. (22)).
+
+One VMEM pass per row block: mask → shift by row max → exp → row sum →
+renormalize.  Fusing the five elementwise/reduction ops avoids four HBM
+round-trips of the [W,N,N] routing tensor — the dominant data movement of
+a control-plane iteration at fleet scale.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG = -1e30
+
+
+def _omd_kernel(phi_ref, delta_ref, mask_ref, o_ref, *, eta: float):
+    phi = phi_ref[0].astype(jnp.float32)         # [br, N]
+    delta = delta_ref[0].astype(jnp.float32)
+    mask = mask_ref[0].astype(jnp.float32)
+    logits = jnp.where(mask > 0, -eta * delta, NEG)
+    logits = logits - jnp.max(logits, axis=-1, keepdims=True)
+    w = phi * jnp.exp(logits) * mask
+    s = w.sum(-1, keepdims=True)
+    out = jnp.where(s > 0, w / jnp.where(s > 0, s, 1.0), phi)
+    o_ref[0] = out.astype(o_ref.dtype)
+
+
+def omd_update(phi, delta, mask, eta: float, *, br: int = 128,
+               interpret: bool = False):
+    """phi, delta, mask [W, N, N] → updated phi.  Rows N multiple of br."""
+    W, N, _ = phi.shape
+    br = min(br, N)
+    assert N % br == 0
+    spec = pl.BlockSpec((1, br, N), lambda w, i: (w, i, 0))
+    return pl.pallas_call(
+        functools.partial(_omd_kernel, eta=eta),
+        grid=(W, N // br),
+        in_specs=[spec, spec, spec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct(phi.shape, phi.dtype),
+        interpret=interpret,
+    )(phi, delta, mask)

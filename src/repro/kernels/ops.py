@@ -1,0 +1,83 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+Each op pads its operands to hardware-aligned tiles, invokes the kernel
+(``interpret=True`` on CPU — the TPU path flips the flag), and slices the
+padding back off.  ``use_pallas(default)`` is the global switch the model
+and control plane consult; on this CPU container the jnp refs are the
+execution path and the kernels are validated in interpret mode.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .flash_attention import flash_attention
+from .flow_step import flow_step
+from .mamba_scan import mamba_scan
+from .omd_update import omd_update
+
+
+def _pad_to(x, axis: int, mult: int, value=0.0):
+    pad = (-x.shape[axis]) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=value)
+
+
+@partial(jax.jit, static_argnames=("causal", "q_offset", "kv_len",
+                                   "interpret"))
+def flash_attention_op(q, k, v, causal=True, q_offset=0, kv_len=None,
+                       interpret=True):
+    """Padded/sliced flash attention; q [B,H,S,hd], k/v [B,KH,T,hd]."""
+    S, T = q.shape[2], k.shape[2]
+    kv_len = T if kv_len is None else kv_len
+    bq = 512 if S >= 512 else max(8, S)
+    bk = 512 if T >= 512 else max(8, T)
+    qp = _pad_to(q, 2, bq)
+    kp = _pad_to(k, 2, bk)
+    vp = _pad_to(v, 2, bk)
+    out = flash_attention(qp, kp, vp, causal=causal, q_offset=q_offset,
+                          kv_len=kv_len, bq=bq, bk=bk, interpret=interpret)
+    return out[:, :, :S]
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def flow_step_op(t, phi, inject, interpret=True):
+    N = t.shape[1]
+    tp = _pad_to(t, 1, 128)
+    ip = _pad_to(inject, 1, 128)
+    pp = _pad_to(_pad_to(phi, 1, 128), 2, 128)
+    return flow_step(tp, pp, ip, interpret=interpret)[:, :N]
+
+
+@partial(jax.jit, static_argnames=("eta", "interpret"))
+def omd_update_op(phi, delta, mask, eta, interpret=True):
+    N = phi.shape[1]
+    pp = _pad_to(_pad_to(phi, 1, 128), 2, 128)
+    dp = _pad_to(_pad_to(delta, 1, 128), 2, 128)
+    mp = _pad_to(_pad_to(mask, 1, 128), 2, 128)
+    out = omd_update(pp, dp, mp, eta, interpret=interpret)
+    return out[:, :N, :N]
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def mamba_scan_op(u, dt, A, Bm, Cm, interpret=True):
+    """Padded chunkwise SSM scan; pads di→128-multiple, S→chunk multiple."""
+    B, S, di = u.shape
+    ck = 128 if S >= 128 else S
+    up = _pad_to(_pad_to(u, 1, ck), 2, 128)
+    dtp = _pad_to(_pad_to(dt, 1, ck), 2, 128)
+    Ap = _pad_to(A, 0, 128)
+    Bp = _pad_to(Bm, 1, ck)
+    Cp = _pad_to(Cm, 1, ck)
+    out = mamba_scan(up, dtp, Ap, Bp, Cp, ck=ck, interpret=interpret)
+    return out[:, :S, :di]
+
+
+__all__ = ["flash_attention_op", "flow_step_op", "mamba_scan_op",
+           "omd_update_op", "ref"]

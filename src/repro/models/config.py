@@ -1,0 +1,128 @@
+"""Model configuration for the composable architecture family.
+
+One ``ModelConfig`` describes any of the 10 assigned architectures: a stack
+of repeated *periods*, each period a tuple of (mixer, mlp) blocks:
+
+  mixer ∈ {attn, mamba, mlstm, slstm}
+  mlp   ∈ {dense, moe, none}
+
+The layer stack is ``n_periods`` repetitions of the period, applied via
+``lax.scan`` over stacked parameters (compile time O(1) in depth).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Literal
+
+Mixer = Literal["attn", "mamba", "mlstm", "slstm"]
+Mlp = Literal["dense", "moe", "none"]
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    d_ff_expert: int
+    n_shared: int = 0
+    capacity_factor: float = 1.25
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    n_layers: int              # total decoder blocks (must = n_periods·|period|)
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    period: tuple[tuple[str, str], ...] = (("attn", "dense"),)
+    head_dim: int = 0          # 0 → d_model // n_heads
+    moe: MoEConfig | None = None
+    # encoder–decoder (whisper): encoder is a plain attn/dense stack
+    enc_dec: bool = False
+    n_enc_layers: int = 0
+    enc_seq: int = 1500        # precomputed frame embeddings length
+    frontend: str | None = None          # None | 'audio' | 'vision'
+    rope: str = "rope"                    # 'rope' | 'mrope' | 'none'
+    rope_theta: float = 10_000.0
+    mrope_sections: tuple[int, int, int] = (16, 24, 24)
+    norm: str = "rms"                     # 'rms' | 'ln'
+    mlp_act: str = "swiglu"               # 'swiglu' | 'gelu'
+    norm_eps: float = 1e-5
+    tie_embeddings: bool = False
+    d_state: int = 16          # mamba SSM state size
+    d_conv: int = 4            # mamba depthwise conv width
+    mamba_expand: int = 2
+    dtype: str = "bfloat16"
+    # bookkeeping from the assignment table (verified-tier source)
+    source: str = ""
+
+    def __post_init__(self):
+        assert self.n_layers % len(self.period) == 0, \
+            f"{self.name}: n_layers {self.n_layers} % period {len(self.period)}"
+        assert self.n_heads % self.n_kv_heads == 0
+
+    @property
+    def n_periods(self) -> int:
+        return self.n_layers // len(self.period)
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def d_inner(self) -> int:
+        return self.mamba_expand * self.d_model
+
+    def has_mixer(self, kind: str) -> bool:
+        return any(m == kind for m, _ in self.period)
+
+    @property
+    def sub_quadratic(self) -> bool:
+        """True iff decode state does not grow quadratically expensive —
+        i.e. the arch can run the long_500k shape (DESIGN.md §6)."""
+        return self.has_mixer("mamba") or self.has_mixer("mlstm") \
+            or self.has_mixer("slstm")
+
+    def approx_params(self) -> int:
+        """Analytic parameter count (used for 6·N·D roofline MODEL_FLOPS)."""
+        d, hd = self.d_model, self.hd
+        total = self.vocab * d * (1 if self.tie_embeddings else 2)
+        for mixer, mlp in self.period:
+            n = self.n_periods
+            if mixer == "attn":
+                qo = d * self.n_heads * hd * 2
+                kv = d * self.n_kv_heads * hd * 2
+                total += n * (qo + kv)
+            elif mixer == "mamba":
+                di, ds = self.d_inner, self.d_state
+                total += n * (d * 2 * di + di * self.d_conv
+                              + di * (2 * ds + 2) + di * ds + di * d)
+            elif mixer in ("mlstm", "slstm"):
+                total += n * (d * self.n_heads * hd * 4
+                              + self.n_heads * hd * d)
+            if mlp == "dense":
+                mult = 3 if self.mlp_act == "swiglu" else 2
+                total += n * mult * d * self.d_ff
+            elif mlp == "moe":
+                e = self.moe
+                total += n * 3 * d * e.d_ff_expert * (e.n_experts + e.n_shared)
+                total += n * d * e.n_experts
+        if self.enc_dec:
+            # encoder layers + decoder cross-attention
+            enc = self.n_enc_layers * (4 * d * self.n_heads * hd
+                                       + 2 * d * self.d_ff)
+            xattn = self.n_layers * 4 * d * self.n_heads * hd
+            total += enc + xattn
+        return total
+
+    def active_params(self) -> int:
+        """Activated parameters per token (MoE-aware) for roofline."""
+        if self.moe is None:
+            return self.approx_params()
+        d = self.d_model
+        e = self.moe
+        n_moe = sum(1 for _, m in self.period if m == "moe") * self.n_periods
+        inactive = n_moe * 3 * d * e.d_ff_expert * (e.n_experts - e.top_k)
+        return self.approx_params() - inactive

@@ -1,0 +1,495 @@
+"""Neural building blocks shared by all 10 assigned architectures.
+
+Pure-functional JAX: every block is (init(cfg, key) -> params,
+apply(cfg, params, x, ...) -> y).  Parameters are plain dict pytrees so the
+sharding layer (parallel/sharding.py) can pattern-match on leaf paths.
+
+Hot spots have Pallas TPU twins in repro/kernels (flash attention); the jnp
+paths here are the oracles and the CPU/dry-run implementations.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel.annotate import shard
+
+from .config import ModelConfig
+
+Array = jnp.ndarray
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+def chunked_scan(step, carry, xs, chunk: int = 64):
+    """Two-level lax.scan with rematerialized inner chunks.
+
+    A flat time scan saves every per-step residual for backward — for
+    recurrent mixers (mamba/mLSTM/sLSTM) that is O(S·state) and blows HBM
+    at S=4k (observed 68 GB/layer for Jamba).  Chunking at √S and
+    ``jax.checkpoint``-ing the inner scan stores only chunk-boundary
+    carries: O(√S·state) live memory at a ~2× recompute cost.
+    """
+    leaves = jax.tree_util.tree_leaves(xs)
+    S = leaves[0].shape[0]
+    if S % chunk != 0 or S <= chunk:
+        return jax.lax.scan(step, carry, xs)
+
+    def reshape(x):
+        return x.reshape((S // chunk, chunk) + x.shape[1:])
+
+    xs_c = jax.tree_util.tree_map(reshape, xs)
+
+    @jax.checkpoint
+    def chunk_fn(c, xc):
+        return jax.lax.scan(step, c, xc)
+
+    carry, ys = jax.lax.scan(chunk_fn, carry, xs_c)
+
+    def unshape(y):
+        return y.reshape((S,) + y.shape[2:])
+
+    return carry, jax.tree_util.tree_map(unshape, ys)
+
+
+def dense_init(key, shape, in_axis=0) -> Array:
+    fan_in = shape[in_axis]
+    return (jax.random.normal(key, shape) / math.sqrt(fan_in)).astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def norm_init(cfg: ModelConfig):
+    p = {"scale": jnp.ones((cfg.d_model,), jnp.float32)}
+    if cfg.norm == "ln":
+        p["bias"] = jnp.zeros((cfg.d_model,), jnp.float32)
+    return p
+
+
+def norm_apply(cfg: ModelConfig, p, x: Array) -> Array:
+    xf = x.astype(jnp.float32)
+    if cfg.norm == "rms":
+        var = jnp.mean(xf * xf, -1, keepdims=True)
+        out = xf * jax.lax.rsqrt(var + cfg.norm_eps) * p["scale"]
+    else:
+        mu = jnp.mean(xf, -1, keepdims=True)
+        var = jnp.var(xf, -1, keepdims=True)
+        out = (xf - mu) * jax.lax.rsqrt(var + cfg.norm_eps) * p["scale"] + p["bias"]
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# rotary embeddings (RoPE / M-RoPE)
+# ---------------------------------------------------------------------------
+
+def _rope_angles(positions: Array, dim: int, theta: float) -> tuple[Array, Array]:
+    """positions [...,S] -> (sin, cos) of shape [...,S, dim//2]."""
+    inv = 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+    ang = positions[..., None].astype(jnp.float32) * inv
+    return jnp.sin(ang), jnp.cos(ang)
+
+
+def apply_rope(cfg: ModelConfig, x: Array, positions: Array) -> Array:
+    """x [B,S,H,hd]; positions [B,S] (RoPE) or [3,B,S] (M-RoPE)."""
+    hd = x.shape[-1]
+    if cfg.rope == "none":
+        return x
+    if cfg.rope == "mrope":
+        # Qwen2-VL multimodal RoPE: head_dim split into (t,h,w) sections,
+        # each rotated by its own position stream (arXiv:2409.12191 §2.1).
+        secs = cfg.mrope_sections
+        assert sum(secs) * 2 == hd, (secs, hd)
+        sins, coss = [], []
+        for s, sec in enumerate(secs):
+            sn, cs = _rope_angles(positions[s], 2 * sec, cfg.rope_theta)
+            sins.append(sn)
+            coss.append(cs)
+        sin = jnp.concatenate(sins, -1)[:, :, None, :]
+        cos = jnp.concatenate(coss, -1)[:, :, None, :]
+    else:
+        sin, cos = _rope_angles(positions, hd, cfg.rope_theta)
+        sin, cos = sin[:, :, None, :], cos[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention (GQA, chunked online-softmax — the jnp flash oracle)
+# ---------------------------------------------------------------------------
+
+def attn_init(cfg: ModelConfig, key, cross: bool = False):
+    d, h, kh, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(ks[0], (d, h * hd)),
+        "wk": dense_init(ks[1], (d, kh * hd)),
+        "wv": dense_init(ks[2], (d, kh * hd)),
+        "wo": dense_init(ks[3], (h * hd, d)),
+    }
+
+
+def _gqa_scores(q: Array, k: Array) -> Array:
+    """q [B,S,KH,G,hd], k [B,T,KH,hd] -> scores [B,KH,G,S,T]."""
+    return jnp.einsum("bskgd,btkd->bkgst", q, k)
+
+
+# int8 KV-cache quantization (REPRO_PERF_VARIANT=int8kv): static scale —
+# post-RoPE K and V values are O(1); production would carry per-head scales
+KV_QUANT_SCALE = 0.05
+
+
+def kv_quantize(x: Array, dtype) -> Array:
+    if jnp.dtype(dtype) != jnp.int8:
+        return x.astype(dtype)
+    return jnp.clip(jnp.round(x.astype(jnp.float32) / KV_QUANT_SCALE),
+                    -127, 127).astype(jnp.int8)
+
+
+def kv_dequantize(x: Array, dtype=jnp.bfloat16) -> Array:
+    if x.dtype != jnp.int8:
+        return x
+    return (x.astype(jnp.float32) * KV_QUANT_SCALE).astype(dtype)
+
+
+def multihead_attention(cfg: ModelConfig, q: Array, k: Array, v: Array,
+                        causal: bool, q_offset: Array | int = 0,
+                        kv_len: Array | None = None,
+                        q_chunk: int = 512) -> Array:
+    """Chunked attention: scan over query chunks, full KV per chunk.
+
+    q [B,S,H,hd]; k,v [B,T,KH,hd].  ``q_offset`` positions the query block
+    inside the KV timeline (decode/prefill continuation); ``kv_len`` masks
+    out unwritten cache slots.  Memory O(S/q_chunk · T) per step.
+    """
+    k = kv_dequantize(k, q.dtype)
+    v = kv_dequantize(v, q.dtype)
+    B, S, H, hd = q.shape
+    T = k.shape[1]
+    KH = k.shape[2]
+    G = H // KH
+    scale = 1.0 / math.sqrt(hd)
+    qg = q.reshape(B, S, KH, G, hd)
+
+    nchunks = max(1, S // q_chunk)
+    qc = S // nchunks
+    qs = qg.reshape(B, nchunks, qc, KH, G, hd)
+
+    kv_pos = jnp.arange(T)
+    # per-sequence offsets/lengths (ragged continuous batching) broadcast
+    # from scalars for the aligned train/prefill case
+    off = jnp.broadcast_to(jnp.asarray(q_offset, jnp.int32), (B,))
+    kvl = jnp.broadcast_to(
+        jnp.asarray(T if kv_len is None else kv_len, jnp.int32), (B,))
+    valid = kv_pos[None, :] < kvl[:, None]              # [B, T]
+
+    @jax.checkpoint  # recompute S² probs in backward: O(S·chunk) live memory
+    def one_chunk(c):
+        qb = qs[:, c]                                   # [B,qc,KH,G,hd]
+        s = jnp.einsum("bskgd,btkd->bkgst", qb, k) * scale
+        mask = valid[:, None, None, None, :]
+        if causal:
+            q_pos = off[:, None] + c * qc + jnp.arange(qc)[None]  # [B,qc]
+            mask = mask & (kv_pos[None, None, :]
+                           <= q_pos[:, :, None])[:, None, None]
+        s = jnp.where(mask, s.astype(jnp.float32), -jnp.inf)
+        s = jnp.where(mask.any(-1, keepdims=True), s, 0.0)  # empty rows
+        p = jax.nn.softmax(s, axis=-1).astype(v.dtype)
+        return jnp.einsum("bkgst,btkd->bskgd", p, v)    # [B,qc,KH,G,hd]
+
+    out = jax.lax.map(one_chunk, jnp.arange(nchunks))   # [n,B,qc,KH,G,hd]
+    out = jnp.moveaxis(out, 0, 1).reshape(B, S, H, hd)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# MLPs: SwiGLU / GELU dense, sort-free capacity-based MoE
+# ---------------------------------------------------------------------------
+
+def mlp_init(cfg: ModelConfig, key, d_ff: int | None = None):
+    d = cfg.d_model
+    f = d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    if cfg.mlp_act == "swiglu":
+        return {"wi": dense_init(ks[0], (d, f)), "wg": dense_init(ks[1], (d, f)),
+                "wo": dense_init(ks[2], (f, d))}
+    return {"wi": dense_init(ks[0], (d, f)), "wo": dense_init(ks[2], (f, d))}
+
+
+def mlp_apply(cfg: ModelConfig, p, x: Array) -> Array:
+    if cfg.mlp_act == "swiglu":
+        h = jax.nn.silu(x @ p["wi"]) * (x @ p["wg"])
+    else:
+        h = jax.nn.gelu(x @ p["wi"])
+    if x.ndim == 3:
+        h = shard(h, "batch", None, "model")
+    return shard(h @ p["wo"], *(("batch",) if x.ndim == 2 else ("batch", None, None)))
+
+
+def moe_init(cfg: ModelConfig, key):
+    e = cfg.moe
+    d, f = cfg.d_model, e.d_ff_expert
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": dense_init(ks[0], (d, e.n_experts)),
+        "wi": dense_init(ks[1], (e.n_experts, d, f)),
+        "wg": dense_init(ks[2], (e.n_experts, d, f)),
+        "wo": dense_init(ks[3], (e.n_experts, f, d)),
+    }
+    if e.n_shared:
+        p["shared"] = mlp_init(cfg, ks[4], d_ff=e.n_shared * f)
+    return p
+
+
+def moe_apply(cfg: ModelConfig, p, x: Array) -> tuple[Array, Array]:
+    """Capacity-based token-choice MoE with *group-local* dispatch.
+
+    Tokens are split into G = data-parallel-size groups; the cumsum /
+    scatter / gather of the dispatch are vmapped over the group axis, so
+    under GSPMD every device dispatches only its own tokens (no cross-host
+    scatter — the naive global dispatch cost 550 GB of collective traffic
+    per step on qwen2-moe, see EXPERIMENTS.md §Perf).  Capacity is
+    enforced per (group, expert), matching how per-host capacity works in
+    GShard/Switch deployments.  Returns (y, load-balance aux loss).
+    """
+    from repro.parallel.annotate import data_parallel_size
+
+    e = cfg.moe
+    B, S, D = x.shape
+    T = B * S
+    G = data_parallel_size()
+    if T % G != 0 or (T // G) < e.n_experts:
+        G = 1
+    Tg = T // G
+    xt = shard(x.reshape(G, Tg, D), "batch", None, None)
+    logits = (xt @ p["router"]).astype(jnp.float32)       # [G, Tg, E]
+    probs = jax.nn.softmax(logits, -1)
+    gval, gidx = jax.lax.top_k(probs, e.top_k)            # [G, Tg, k]
+    gval = gval / jnp.maximum(gval.sum(-1, keepdims=True), 1e-9)
+
+    # load-balance auxiliary (Switch-style)
+    density = jnp.mean(jax.nn.one_hot(gidx[..., 0], e.n_experts), (0, 1))
+    aux = e.n_experts * jnp.sum(density * probs.mean((0, 1)))
+
+    cap = int(e.capacity_factor * Tg * e.top_k / e.n_experts)
+    cap = max(cap, 4)
+
+    onehot = jax.nn.one_hot(gidx, e.n_experts, dtype=jnp.int32)  # [G,Tg,k,E]
+    pos = jnp.cumsum(onehot.reshape(G, Tg * e.top_k, e.n_experts), 1) - 1
+    pos = pos.reshape(G, Tg, e.top_k, e.n_experts)
+    slot = jnp.sum(pos * onehot, -1)                       # [G, Tg, k]
+    keep = slot < cap
+    gval = gval * keep
+
+    flat_e = gidx.reshape(G, -1)                           # [G, Tg*k]
+    flat_s = jnp.where(keep, slot, cap).reshape(G, -1)
+
+    def dispatch(xg, eg, sg):
+        buf = jnp.zeros((e.n_experts, cap + 1, D), x.dtype)
+        src = jnp.repeat(xg, e.top_k, 0)
+        return buf.at[eg, sg].add(src)[:, :cap]
+
+    xe = jax.vmap(dispatch)(xt, flat_e, flat_s)            # [G, E, cap, D]
+    xe = shard(xe, "batch", "model", None, None)
+
+    h = jax.nn.silu(jnp.einsum("gecd,edf->gecf", xe, p["wi"]))
+    h = shard(h, "batch", "model") * jnp.einsum("gecd,edf->gecf", xe, p["wg"])
+    ye = jnp.einsum("gecf,efd->gecd", h, p["wo"])          # [G, E, cap, D]
+    ye = shard(ye, "batch", "model", None, None)
+
+    def combine(yg, eg, sg):
+        return yg[eg, jnp.minimum(sg, cap - 1)]            # [Tg*k, D]
+
+    yt = jax.vmap(combine)(ye, flat_e, flat_s)
+    yt = yt * gval.reshape(G, -1, 1).astype(x.dtype)
+    y = yt.reshape(G, Tg, e.top_k, D).sum(2)               # [G, Tg, D]
+
+    if e.n_shared:
+        y = y + mlp_apply(cfg, p["shared"], xt.reshape(G * Tg, D)) \
+            .reshape(G, Tg, D)
+    return shard(y.reshape(B, S, D), "batch", None, None), aux
+
+
+# ---------------------------------------------------------------------------
+# Mamba (S6 selective SSM) — recurrent scan formulation
+# ---------------------------------------------------------------------------
+
+def mamba_init(cfg: ModelConfig, key):
+    d, di, ds = cfg.d_model, cfg.d_inner, cfg.d_state
+    ks = jax.random.split(key, 6)
+    return {
+        "in_proj": dense_init(ks[0], (d, 2 * di)),
+        "conv": dense_init(ks[1], (cfg.d_conv, di)) * 0.1,
+        "x_proj": dense_init(ks[2], (di, 2 * ds + 1)),   # B, C, dt
+        "dt_bias": jnp.zeros((di,), jnp.float32),
+        "dt_w": dense_init(ks[3], (1, di)),
+        "A_log": jnp.log(jnp.arange(1, ds + 1, dtype=jnp.float32))
+                 * jnp.ones((di, 1)),
+        "D": jnp.ones((di,), jnp.float32),
+        "out_proj": dense_init(ks[4], (di, d)),
+    }
+
+
+def _mamba_scan(u: Array, dt: Array, A: Array, Bm: Array, Cm: Array,
+                h0: Array | None):
+    """Sequential state scan.  u,dt [B,S,di]; Bm,Cm [B,S,ds]; A [di,ds].
+
+    Returns (y [B,S,di], h_last [B,di,ds]).  lax.scan keeps the HLO O(1) in
+    sequence length; the TPU-native chunkwise kernel is the optimization
+    target (DESIGN.md §4).
+    """
+    Bsz, S, di = u.shape
+    ds = A.shape[-1]
+    h = (shard(jnp.zeros((Bsz, di, ds), jnp.float32), "batch", "model", None)
+         if h0 is None else h0)
+
+    def step(h, inp):
+        u_t, dt_t, B_t, C_t = inp
+        dA = jnp.exp(dt_t[..., None] * A)                  # [B,di,ds]
+        dBu = (dt_t * u_t)[..., None] * B_t[:, None, :]    # [B,di,ds]
+        h = dA * h + dBu
+        y = jnp.einsum("bds,bs->bd", h, C_t)
+        return h, y
+
+    xs = (jnp.moveaxis(u, 1, 0), jnp.moveaxis(dt, 1, 0),
+          jnp.moveaxis(Bm, 1, 0), jnp.moveaxis(Cm, 1, 0))
+    h, ys = chunked_scan(step, h, xs)
+    return jnp.moveaxis(ys, 0, 1), h
+
+
+def mamba_apply(cfg: ModelConfig, p, x: Array, state=None, conv_state=None):
+    """state: SSM hidden [B,di,ds]; conv_state: last d_conv-1 inputs."""
+    B, S, _ = x.shape
+    di, ds, K = cfg.d_inner, cfg.d_state, cfg.d_conv
+    xz = shard(x @ p["in_proj"], "batch", None, "model")
+    u, z = jnp.split(xz, 2, -1)                            # [B,S,di]
+
+    # depthwise causal conv along S
+    if conv_state is None:
+        pad = jnp.zeros((B, K - 1, di), u.dtype)
+    else:
+        pad = conv_state.astype(u.dtype)
+    uc = jnp.concatenate([pad, u], 1)
+    new_conv = uc[:, -(K - 1):]
+    u = sum(uc[:, k:k + S] * p["conv"][k].astype(u.dtype) for k in range(K))
+    u = jax.nn.silu(u)
+
+    bcd = (u @ p["x_proj"]).astype(jnp.float32)
+    Bm, Cm, dt_in = bcd[..., :ds], bcd[..., ds:2 * ds], bcd[..., -1:]
+    dt = jax.nn.softplus(dt_in @ p["dt_w"] + p["dt_bias"])  # [B,S,di]
+    A = -jnp.exp(p["A_log"])                                # [di,ds]
+
+    y, h = _mamba_scan(u.astype(jnp.float32), dt, A, Bm, Cm, state)
+    y = y.astype(x.dtype) + u * p["D"].astype(x.dtype)
+    out = shard((y * jax.nn.silu(z)) @ p["out_proj"], "batch", None, None)
+    return out, (h, new_conv)
+
+
+# ---------------------------------------------------------------------------
+# xLSTM blocks (arXiv:2405.04517): mLSTM (matrix memory) & sLSTM (scalar)
+# ---------------------------------------------------------------------------
+
+def mlstm_init(cfg: ModelConfig, key):
+    d, h, hd = cfg.d_model, cfg.n_heads, cfg.hd
+    ks = jax.random.split(key, 6)
+    return {
+        "wq": dense_init(ks[0], (d, h * hd)),
+        "wk": dense_init(ks[1], (d, h * hd)),
+        "wv": dense_init(ks[2], (d, h * hd)),
+        "wif": dense_init(ks[3], (d, 2 * h)),     # input & forget gate logits
+        "wo_gate": dense_init(ks[4], (d, h * hd)),
+        "wo": dense_init(ks[5], (h * hd, d)),
+    }
+
+
+def mlstm_apply(cfg: ModelConfig, p, x: Array, state=None):
+    """mLSTM with exponential gating and stabilizer state.
+
+    state = (C [B,H,hd,hd], n [B,H,hd], m [B,H]).
+    """
+    B, S, _ = x.shape
+    H, hd = cfg.n_heads, cfg.hd
+    q = shard(x @ p["wq"], "batch", None, "model").reshape(B, S, H, hd) / math.sqrt(hd)
+    k = shard(x @ p["wk"], "batch", None, "model").reshape(B, S, H, hd) / math.sqrt(hd)
+    v = shard(x @ p["wv"], "batch", None, "model").reshape(B, S, H, hd)
+    gates = (x @ p["wif"]).astype(jnp.float32).reshape(B, S, 2, H)
+    i_log, f_log = gates[:, :, 0], jax.nn.log_sigmoid(gates[:, :, 1])
+
+    if state is None:
+        C = shard(jnp.zeros((B, H, hd, hd), jnp.float32),
+                  "batch", None, "model", None)
+        n = shard(jnp.zeros((B, H, hd), jnp.float32), "batch", None, "model")
+        m = jnp.full((B, H), -1e30, jnp.float32)
+    else:
+        C, n, m = state
+
+    def step(carry, inp):
+        C, n, m = carry
+        q_t, k_t, v_t, i_t, f_t = inp
+        m_new = jnp.maximum(f_t + m, i_t)
+        fd = jnp.exp(f_t + m - m_new)[..., None]
+        id_ = jnp.exp(i_t - m_new)[..., None]
+        kf, vf = k_t.astype(jnp.float32), v_t.astype(jnp.float32)
+        C = fd[..., None] * C + id_[..., None] * (vf[..., :, None]
+                                                  * kf[..., None, :])
+        n = fd * n + id_ * kf
+        qf = q_t.astype(jnp.float32)
+        num = jnp.einsum("bhvk,bhk->bhv", C, qf)
+        den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", n, qf)), 1.0)
+        return (C, n, m_new), num / den[..., None]
+
+    xs = tuple(jnp.moveaxis(a, 1, 0) for a in (q, k, v, i_log, f_log))
+    (C, n, m), ys = chunked_scan(step, (C, n, m), xs)
+    h = jnp.moveaxis(ys, 0, 1).reshape(B, S, H * hd).astype(x.dtype)
+    h = h * jax.nn.silu(shard(x @ p["wo_gate"], "batch", None, "model"))
+    return shard(h @ p["wo"], "batch", None, None), (C, n, m)
+
+
+def slstm_init(cfg: ModelConfig, key):
+    d, h, hd = cfg.d_model, cfg.n_heads, cfg.hd
+    ks = jax.random.split(key, 3)
+    return {
+        "wx": dense_init(ks[0], (d, 4 * h * hd)),          # z,i,f,o from x
+        "wr": dense_init(ks[1], (h, hd, 4 * hd)) * 0.1,    # per-head recurrent
+        "wo": dense_init(ks[2], (h * hd, d)),
+    }
+
+
+def slstm_apply(cfg: ModelConfig, p, x: Array, state=None):
+    """sLSTM: scalar memory, exponential gating, block-diagonal recurrence.
+
+    state = (c, n, m, hprev) each [B,H,hd] (m: stabilizer).
+    """
+    B, S, _ = x.shape
+    H, hd = cfg.n_heads, cfg.hd
+    xz = shard(x @ p["wx"], "batch", None, "model").reshape(B, S, H, 4 * hd)
+    if state is None:
+        z = jnp.zeros((B, H, hd), jnp.float32)
+        state = (z, z + 1e-6, z - 1e30, z)
+    c0, n0, m0, h0 = state
+
+    def step(carry, x_t):
+        c, n, m, hp = carry
+        rec = jnp.einsum("bhk,hkj->bhj", hp, p["wr"].astype(jnp.float32))
+        pre = x_t.astype(jnp.float32) + rec                 # [B,H,4hd]
+        zt, it, ft, ot = jnp.split(pre, 4, -1)
+        zt = jnp.tanh(zt)
+        ft = jax.nn.log_sigmoid(ft)
+        m_new = jnp.maximum(ft + m, it)
+        c = jnp.exp(ft + m - m_new) * c + jnp.exp(it - m_new) * zt
+        n = jnp.exp(ft + m - m_new) * n + jnp.exp(it - m_new)
+        h = jax.nn.sigmoid(ot) * c / jnp.maximum(n, 1e-6)
+        return (c, n, m_new, h), h
+
+    (c, n, m, hl), ys = chunked_scan(step, (c0, n0, m0, h0),
+                                     jnp.moveaxis(xz, 1, 0))
+    h = jnp.moveaxis(ys, 0, 1).reshape(B, S, H * hd).astype(x.dtype)
+    return shard(h @ p["wo"], "batch", None, None), (c, n, m, hl)

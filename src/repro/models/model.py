@@ -1,0 +1,376 @@
+"""Composable model assembly: config → init / train_loss / prefill / decode.
+
+The layer stack is ``lax.scan`` over ``n_periods`` repetitions of the
+config's period (stacked parameters), so HLO size and compile time are O(1)
+in depth — essential for the 62–80-layer dry-run cells.
+
+Entry points (all pure):
+  init(cfg, key)                          -> params (fp32 masters)
+  train_loss(cfg, params, batch)          -> (loss, aux)
+  prefill(cfg, params, batch)             -> (last-token logits, cache)
+  decode_step(cfg, params, tokens, cache) -> (logits, cache)
+  init_cache(cfg, batch, max_len)         -> zeroed cache pytree
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel.annotate import shard
+
+from . import layers as L
+from .config import ModelConfig
+
+Array = jnp.ndarray
+PyTree = Any
+
+# roofline/extract.py flips this so shallow analysis variants compile with
+# the layer scan fully unrolled (XLA cost analysis counts loop bodies once;
+# unrolled HLO makes per-period costs exact)
+UNROLL_SCAN = False
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _block_init(cfg: ModelConfig, key, mixer: str, mlp: str, cross: bool):
+    ks = jax.random.split(key, 6)
+    p: dict[str, Any] = {"norm1": L.norm_init(cfg)}
+    if mixer == "attn":
+        p["mixer"] = L.attn_init(cfg, ks[0])
+    elif mixer == "mamba":
+        p["mixer"] = L.mamba_init(cfg, ks[0])
+    elif mixer == "mlstm":
+        p["mixer"] = L.mlstm_init(cfg, ks[0])
+    elif mixer == "slstm":
+        p["mixer"] = L.slstm_init(cfg, ks[0])
+    else:
+        raise ValueError(mixer)
+    if cross:
+        p["norm_x"] = L.norm_init(cfg)
+        p["xattn"] = L.attn_init(cfg, ks[1], cross=True)
+    if mlp == "dense":
+        p["norm2"] = L.norm_init(cfg)
+        p["mlp"] = L.mlp_init(cfg, ks[2])
+    elif mlp == "moe":
+        p["norm2"] = L.norm_init(cfg)
+        p["mlp"] = L.moe_init(cfg, ks[2])
+    return p
+
+
+def _stack_init(cfg: ModelConfig, key, period, n_periods: int, cross: bool):
+    def one_period(k):
+        kk = jax.random.split(k, len(period))
+        return {f"b{i}": _block_init(cfg, kk[i], m, f, cross)
+                for i, (m, f) in enumerate(period)}
+
+    keys = jax.random.split(key, n_periods)
+    return jax.vmap(one_period)(keys)
+
+
+def init(cfg: ModelConfig, key) -> PyTree:
+    ks = jax.random.split(key, 6)
+    params: dict[str, Any] = {
+        "embed": L.dense_init(ks[0], (cfg.vocab, cfg.d_model), in_axis=1),
+        "blocks": _stack_init(cfg, ks[1], cfg.period, cfg.n_periods,
+                              cross=cfg.enc_dec),
+        "final_norm": L.norm_init(cfg),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = L.dense_init(ks[2], (cfg.d_model, cfg.vocab))
+    if cfg.enc_dec:
+        enc_period = (("attn", "dense"),)
+        params["enc"] = {
+            "blocks": _stack_init(cfg, ks[3], enc_period, cfg.n_enc_layers,
+                                  cross=False),
+            "norm": L.norm_init(cfg),
+            "pos": L.dense_init(ks[4], (cfg.enc_seq, cfg.d_model)) * 0.02,
+        }
+    return params
+
+
+# ---------------------------------------------------------------------------
+# cache
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               dtype=None) -> PyTree:
+    """Zeroed decode cache, one stacked entry per period position."""
+    dt = jnp.dtype(dtype or cfg.dtype)
+    P = cfg.n_periods
+    B, KH, hd, H = batch, cfg.n_kv_heads, cfg.hd, cfg.n_heads
+    cache: dict[str, Any] = {"len": jnp.zeros((batch,), jnp.int32)}
+    for i, (mixer, _) in enumerate(cfg.period):
+        if mixer == "attn":
+            c = {"k": jnp.zeros((P, B, max_len, KH, hd), dt),
+                 "v": jnp.zeros((P, B, max_len, KH, hd), dt)}
+            if cfg.enc_dec:
+                c["xk"] = jnp.zeros((P, B, cfg.enc_seq, KH, hd), dt)
+                c["xv"] = jnp.zeros((P, B, cfg.enc_seq, KH, hd), dt)
+        elif mixer == "mamba":
+            c = {"h": jnp.zeros((P, B, cfg.d_inner, cfg.d_state), jnp.float32),
+                 "conv": jnp.zeros((P, B, cfg.d_conv - 1, cfg.d_inner), dt)}
+        elif mixer == "mlstm":
+            c = {"C": jnp.zeros((P, B, H, hd, hd), jnp.float32),
+                 "n": jnp.zeros((P, B, H, hd), jnp.float32),
+                 "m": jnp.full((P, B, H), -1e30, jnp.float32)}
+        elif mixer == "slstm":
+            z = jnp.zeros((P, B, H, hd), jnp.float32)
+            c = {"c": z, "n": z + 1e-6, "m": z - 1e30, "h": z}
+        cache[f"b{i}"] = c
+    return cache
+
+
+# ---------------------------------------------------------------------------
+# block application
+# ---------------------------------------------------------------------------
+
+def _positions(cfg: ModelConfig, B: int, S: int, offset) -> Array:
+    off = jnp.broadcast_to(jnp.asarray(offset, jnp.int32), (B,))
+    pos = off[:, None] + jnp.arange(S)[None, :]        # per-sequence offsets
+    if cfg.rope == "mrope":
+        return jnp.broadcast_to(pos[None], (3, B, S))  # text: t=h=w stream
+    return pos
+
+
+def _attn_block(cfg: ModelConfig, p, x: Array, positions, cache, offset,
+                causal=True):
+    """Self-attention with optional cache read/write. Returns (y, new_cache)."""
+    import os
+
+    B, S, _ = x.shape
+    H, KH, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    q = shard(x @ p["wq"], "batch", None, "model").reshape(B, S, H, hd)
+    k = shard(x @ p["wk"], "batch", None, "model").reshape(B, S, KH, hd)
+    v = shard(x @ p["wv"], "batch", None, "model").reshape(B, S, KH, hd)
+    if "attnbatch" in os.environ.get("REPRO_PERF_VARIANT", ""):
+        # §Perf variant: batch-only attention sharding — one explicit
+        # gather of q/k/v over 'model' per layer instead of GSPMD's
+        # "involuntary full rematerialization" of score tensors (head
+        # counts like 56/8 cannot shard 16-way, so XLA otherwise
+        # replicates mid-attention at far higher cost)
+        q = shard(q, "batch", None, None, None)
+        k = shard(k, "batch", None, None, None)
+        v = shard(v, "batch", None, None, None)
+    q = L.apply_rope(cfg, q, positions)
+    k = L.apply_rope(cfg, k, positions)
+
+    if cache is None:
+        out = L.multihead_attention(cfg, q, k, v, causal=causal)
+        new = None
+    else:
+        kq = L.kv_quantize(k, cache["k"].dtype)
+        vq = L.kv_quantize(v, cache["v"].dtype)
+        if isinstance(offset, int):
+            # aligned prefill: contiguous dynamic-update-slice
+            ck = jax.lax.dynamic_update_slice(cache["k"], kq, (0, offset, 0, 0))
+            cv = jax.lax.dynamic_update_slice(cache["v"], vq, (0, offset, 0, 0))
+        else:
+            # ragged decode: per-sequence write positions (continuous batching)
+            rows = jnp.arange(B)[:, None]
+            cols = offset[:, None] + jnp.arange(S)[None, :]
+            ck = cache["k"].at[rows, cols].set(kq, mode="drop")
+            cv = cache["v"].at[rows, cols].set(vq, mode="drop")
+        out = L.multihead_attention(cfg, q, ck, cv, causal=True,
+                                    q_offset=offset, kv_len=offset + S)
+        new = {"k": ck, "v": cv}
+    y = shard(out.reshape(B, S, H * hd), "batch", None, "model") @ p["wo"]
+    return shard(y, "batch", None, None), new
+
+
+def _cross_attn(cfg: ModelConfig, p, x: Array, xk, xv):
+    B, S, _ = x.shape
+    H, hd = cfg.n_heads, cfg.hd
+    q = shard(x @ p["wq"], "batch", None, "model").reshape(B, S, H, hd)
+    out = L.multihead_attention(cfg, q, xk, xv, causal=False)
+    y = shard(out.reshape(B, S, H * hd), "batch", None, "model") @ p["wo"]
+    return shard(y, "batch", None, None)
+
+
+def _apply_block(cfg: ModelConfig, mixer: str, mlp: str, p, x, positions,
+                 cache, offset, enc_out=None, causal=True,
+                 compute_xkv=False):
+    new_cache = {}
+    h = L.norm_apply(cfg, p["norm1"], x)
+    if mixer == "attn":
+        y, kv = _attn_block(cfg, p["mixer"], h, positions, cache, offset,
+                            causal)
+        if kv is not None:
+            new_cache.update(kv)
+    elif mixer == "mamba":
+        st = (cache["h"], cache["conv"]) if cache is not None else (None, None)
+        y, (hs, cs) = L.mamba_apply(cfg, p["mixer"], h, *st)
+        if cache is not None:
+            new_cache.update({"h": hs, "conv": cs})
+    elif mixer == "mlstm":
+        st = (cache["C"], cache["n"], cache["m"]) if cache is not None else None
+        y, (C, n, m) = L.mlstm_apply(cfg, p["mixer"], h, st)
+        if cache is not None:
+            new_cache.update({"C": C, "n": n, "m": m})
+    elif mixer == "slstm":
+        st = ((cache["c"], cache["n"], cache["m"], cache["h"])
+              if cache is not None else None)
+        y, (c, n, m, hl) = L.slstm_apply(cfg, p["mixer"], h, st)
+        if cache is not None:
+            new_cache.update({"c": c, "n": n, "m": m, "h": hl})
+    x = x + y
+
+    if cfg.enc_dec and "xattn" in p:
+        hx = L.norm_apply(cfg, p["norm_x"], x)
+        if cache is not None and "xk" in cache and not compute_xkv:
+            xk, xv = cache["xk"], cache["xv"]
+            new_cache.update({"xk": xk, "xv": xv})
+        else:
+            B = x.shape[0]
+            KH, hd = cfg.n_kv_heads, cfg.hd
+            xk = (enc_out @ p["xattn"]["wk"]).reshape(B, -1, KH, hd)
+            xv = (enc_out @ p["xattn"]["wv"]).reshape(B, -1, KH, hd)
+            if cache is not None:
+                dt = jnp.dtype(cfg.dtype)
+                new_cache.update({"xk": xk.astype(dt), "xv": xv.astype(dt)})
+        x = x + _cross_attn(cfg, p["xattn"], hx, xk, xv)
+
+    aux = jnp.zeros((), jnp.float32)
+    if mlp != "none":
+        h2 = L.norm_apply(cfg, p["norm2"], x)
+        if mlp == "dense":
+            y2 = L.mlp_apply(cfg, p["mlp"], h2)
+        else:
+            y2, aux = L.moe_apply(cfg, p["mlp"], h2)
+        x = x + y2
+    return x, new_cache, aux
+
+
+def _run_stack(cfg: ModelConfig, blocks, x, positions, cache, offset,
+               period, enc_out=None, causal=True, remat=False,
+               compute_xkv=False):
+    """scan over stacked periods; cache (if any) scanned alongside."""
+
+    def period_fn(x, xs):
+        p_params, p_cache = xs
+        aux_tot = jnp.zeros((), jnp.float32)
+        new_cache = {}
+        for i, (mixer, mlp) in enumerate(period):
+            c = None if p_cache is None else p_cache[f"b{i}"]
+            x, nc, aux = _apply_block(cfg, mixer, mlp, p_params[f"b{i}"], x,
+                                      positions, c, offset, enc_out, causal,
+                                      compute_xkv)
+            new_cache[f"b{i}"] = nc
+            aux_tot = aux_tot + aux
+        return x, (new_cache, aux_tot)
+
+    if remat:
+        period_fn = jax.checkpoint(period_fn,
+                                   policy=jax.checkpoint_policies.nothing_saveable)
+
+    unroll = True if UNROLL_SCAN else 1
+    if cache is None:
+        x, (_, aux) = jax.lax.scan(lambda c, b: period_fn(c, (b, None)),
+                                   x, blocks, unroll=unroll)
+        return x, None, aux.sum()
+    layer_cache = {k: v for k, v in cache.items() if k != "len"}
+    x, (new_cache, aux) = jax.lax.scan(period_fn, x, (blocks, layer_cache),
+                                       unroll=unroll)
+    return x, new_cache, aux.sum()
+
+
+# ---------------------------------------------------------------------------
+# entry points
+# ---------------------------------------------------------------------------
+
+def _embed_in(cfg: ModelConfig, params, batch) -> Array:
+    if "embeds" in batch:
+        return shard(batch["embeds"].astype(cfg.dtype), "batch", None, None)
+    emb = params["embed"].astype(cfg.dtype)
+    return shard(emb[batch["tokens"]], "batch", None, None)
+
+
+def _encode(cfg: ModelConfig, params, batch) -> Array:
+    enc = params["enc"]
+    x = batch["enc_embeds"].astype(cfg.dtype) + enc["pos"].astype(cfg.dtype)
+    pos = _positions(cfg, x.shape[0], x.shape[1], 0)
+    x, _, _ = _run_stack(cfg, enc["blocks"], x, pos, None, 0,
+                         (("attn", "dense"),), causal=False)
+    return L.norm_apply(cfg, enc["norm"], x)
+
+
+def _logits(cfg: ModelConfig, params, x: Array) -> Array:
+    x = L.norm_apply(cfg, params["final_norm"], x)
+    head = (params["embed"].T if cfg.tie_embeddings
+            else params["lm_head"]).astype(cfg.dtype)
+    return shard(x @ head, "batch", None, "model")
+
+
+def _cast(cfg: ModelConfig, params):
+    dt = jnp.dtype(cfg.dtype)
+    return jax.tree_util.tree_map(
+        lambda w: w.astype(dt) if w.dtype == jnp.float32 else w, params)
+
+
+def forward(cfg: ModelConfig, params, batch, remat=False) -> tuple[Array, Array]:
+    """Full-sequence forward → (logits [B,S,V], moe aux loss)."""
+    cparams = _cast(cfg, params)
+    x = _embed_in(cfg, cparams, batch)
+    enc_out = _encode(cfg, cparams, batch) if cfg.enc_dec else None
+    pos = _positions(cfg, x.shape[0], x.shape[1], 0)
+    x, _, aux = _run_stack(cfg, cparams["blocks"], x, pos, None, 0,
+                           cfg.period, enc_out=enc_out, remat=remat)
+    return _logits(cfg, cparams, x), aux
+
+
+def train_loss(cfg: ModelConfig, params, batch, remat=True):
+    """Next-token cross entropy (+0.01·moe aux). Labels = shifted tokens."""
+    from repro.parallel.annotate import axis_divides
+
+    logits, aux = forward(cfg, params, batch, remat=remat)
+    labels = batch.get("labels", batch.get("tokens"))
+    # full-S loss with a weight mask (keeps the seq dim mesh-divisible);
+    # shard the f32 logits over vocab when it divides (prime-ish vocabs
+    # like granite's 49155 fall back to sequence sharding)
+    spec = (("batch", None, "model") if axis_divides("model", cfg.vocab)
+            else ("batch", "model", None))
+    lg = shard(logits.astype(jnp.float32), *spec)
+    tg = jnp.concatenate([labels[:, 1:], labels[:, :1]], axis=1)
+    w = jnp.ones(tg.shape, jnp.float32).at[:, -1].set(0.0)
+    lse = jax.nn.logsumexp(lg, -1)
+    # one-hot contraction instead of take_along_axis: the gather over the
+    # vocab-sharded axis would force a full-logits all-gather per device
+    oh = shard(jax.nn.one_hot(tg, lg.shape[-1], dtype=lg.dtype), *spec)
+    ll = jnp.einsum("bsv,bsv->bs", lg, oh)
+    loss = jnp.sum((lse - ll) * w) / jnp.sum(w)
+    return loss + 0.01 * aux / max(cfg.n_layers, 1), {"ce": loss, "aux": aux}
+
+
+def prefill(cfg: ModelConfig, params, batch, max_len: int | None = None):
+    """Process the prompt, fill the cache, return last-position logits."""
+    cparams = _cast(cfg, params)
+    x = _embed_in(cfg, cparams, batch)
+    B, S = x.shape[0], x.shape[1]
+    cache = init_cache(cfg, B, max_len or S)
+    enc_out = _encode(cfg, cparams, batch) if cfg.enc_dec else None
+    pos = _positions(cfg, B, S, 0)
+    x, new_cache, _ = _run_stack(cfg, cparams["blocks"], x, pos, cache, 0,
+                                 cfg.period, enc_out=enc_out,
+                                 compute_xkv=True)
+    new_cache["len"] = jnp.full((B,), S, jnp.int32)
+    logits = _logits(cfg, cparams, x[:, -1:])
+    return logits[:, 0], new_cache
+
+
+def decode_step(cfg: ModelConfig, params, tokens: Array, cache):
+    """One token for every sequence in the batch. tokens [B, 1] int32."""
+    cparams = _cast(cfg, params)
+    x = _embed_in(cfg, cparams, {"tokens": tokens})
+    B = x.shape[0]
+    offset = cache["len"]
+    pos = _positions(cfg, B, 1, offset)
+    x, new_cache, _ = _run_stack(cfg, cparams["blocks"], x, pos, cache,
+                                 offset, cfg.period)
+    new_cache["len"] = cache["len"] + 1
+    logits = _logits(cfg, cparams, x)
+    return logits[:, 0], new_cache

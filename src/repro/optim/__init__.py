@@ -1,0 +1,4 @@
+from .adamw import AdamW, OptState
+from .schedule import cosine_schedule
+
+__all__ = ["AdamW", "OptState", "cosine_schedule"]

@@ -1,0 +1,64 @@
+"""AdamW in pure JAX with optionally low-precision moments.
+
+``moment_dtype='bfloat16'`` halves optimizer HBM (the ZeRO-3-style sharding
+in parallel/sharding.py shards the moments like the weights; together these
+are what let the 398B Jamba train cell fit 16 GB/chip — DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class OptState(NamedTuple):
+    step: jax.Array
+    mu: Any            # first moment  (moment_dtype)
+    nu: Any            # second moment (moment_dtype)
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    moment_dtype: str = "float32"
+
+    def init(self, params) -> OptState:
+        dt = jnp.dtype(self.moment_dtype)
+        zeros = lambda p: jnp.zeros_like(p, dtype=dt)
+        return OptState(step=jnp.zeros((), jnp.int32),
+                        mu=jax.tree_util.tree_map(zeros, params),
+                        nu=jax.tree_util.tree_map(zeros, params))
+
+    def update(self, grads, state: OptState, params, lr):
+        # global-norm clip
+        gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                             for g in jax.tree_util.tree_leaves(grads)))
+        scale = jnp.minimum(1.0, self.clip_norm / (gnorm + 1e-9))
+        step = state.step + 1
+        c1 = 1.0 - self.b1 ** step.astype(jnp.float32)
+        c2 = 1.0 - self.b2 ** step.astype(jnp.float32)
+        dt = jnp.dtype(self.moment_dtype)
+
+        def upd(g, m, v, p):
+            g = g.astype(jnp.float32) * scale
+            m32 = self.b1 * m.astype(jnp.float32) + (1 - self.b1) * g
+            v32 = self.b2 * v.astype(jnp.float32) + (1 - self.b2) * g * g
+            upd = (m32 / c1) / (jnp.sqrt(v32 / c2) + self.eps)
+            upd = upd + self.weight_decay * p.astype(jnp.float32)
+            new_p = p.astype(jnp.float32) - lr * upd
+            return new_p.astype(p.dtype), m32.astype(dt), v32.astype(dt)
+
+        out = jax.tree_util.tree_map(upd, grads, state.mu, state.nu, params)
+        new_p = jax.tree_util.tree_map(lambda o: o[0], out,
+                                       is_leaf=lambda x: isinstance(x, tuple))
+        new_m = jax.tree_util.tree_map(lambda o: o[1], out,
+                                       is_leaf=lambda x: isinstance(x, tuple))
+        new_v = jax.tree_util.tree_map(lambda o: o[2], out,
+                                       is_leaf=lambda x: isinstance(x, tuple))
+        return new_p, OptState(step=step, mu=new_m, nu=new_v), gnorm

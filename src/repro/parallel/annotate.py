@@ -1,0 +1,82 @@
+"""Logical activation-sharding annotations.
+
+The model code marks activations with *logical* axes ('batch', 'model',
+None); the launcher activates a mesh mapping and the marks become
+``with_sharding_constraint``s.  Without an active mapping they are no-ops,
+so model code runs unchanged on a single CPU device (tests, benchmarks).
+
+Divisibility guard: a dim that does not divide its mesh axes falls back to
+replicated (e.g. long_500k's global_batch=1 over the 16-way data axis).
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+_STATE = threading.local()
+
+
+def _mapping():
+    return getattr(_STATE, "mapping", None)
+
+
+@contextlib.contextmanager
+def activation_sharding(mesh, batch_axes, model_axis: str | None = "model"):
+    """Map logical 'batch' → ``batch_axes``, 'model' → ``model_axis``.
+
+    ``model_axis=None`` (fsdp256 §Perf variant) disables TP constraints —
+    activations shard on batch only, weights are pure-FSDP."""
+    prev = _mapping()
+    _STATE.mapping = {"mesh": mesh, "batch": batch_axes, "model": model_axis}
+    try:
+        yield
+    finally:
+        _STATE.mapping = prev
+
+
+def _axis_size(mesh, entry) -> int:
+    if entry is None:
+        return 1
+    if isinstance(entry, tuple):
+        n = 1
+        for a in entry:
+            n *= mesh.shape[a]
+        return n
+    return mesh.shape[entry]
+
+
+def data_parallel_size() -> int:
+    """Number of data-parallel shards under the active mapping (1 if none).
+    Model code uses this to pick shard-local group counts (MoE dispatch)."""
+    m = _mapping()
+    if m is None or m.get("batch") is None:
+        return 1
+    return _axis_size(m["mesh"], m["batch"])
+
+
+def axis_divides(name: str, dim: int) -> bool:
+    """Would logical axis ``name`` shard a dim of size ``dim`` evenly?"""
+    m = _mapping()
+    if m is None or m.get(name) is None:
+        return True
+    return dim % _axis_size(m["mesh"], m[name]) == 0
+
+
+def shard(x, *logical):
+    """Constrain ``x`` to the logical spec, e.g. shard(h, 'batch', None,
+    'model').  Trailing dims default to None."""
+    m = _mapping()
+    if m is None:
+        return x
+    mesh = m["mesh"]
+    parts = []
+    for dim, name in zip(x.shape, logical):
+        entry = m.get(name) if name else None
+        if entry is not None and dim % _axis_size(mesh, entry) != 0:
+            entry = None
+        parts.append(entry)
+    return jax.lax.with_sharding_constraint(
+        x, jax.sharding.NamedSharding(mesh, P(*parts)))

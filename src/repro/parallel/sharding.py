@@ -1,0 +1,224 @@
+"""Sharding rules: parameter/batch/cache PartitionSpecs for any mesh.
+
+Scheme (DESIGN.md §5):
+  * weights — 2-D sharded: the d_model-ish dim FSDP over the data axes
+    ('pod','data'), the wide dim (d_ff / flattened heads / vocab) TP over
+    'model'.  Flattened head dims (H·hd) are 16-divisible for *all* ten
+    archs, unlike raw head counts (56, 24, 9, 20 …) — this is what makes a
+    single rule set compile everywhere.
+  * MoE experts — expert-parallel over 'model', FSDP over data axes.
+  * optimizer moments — sharded exactly like their weights (ZeRO-3).
+  * KV caches — batch over data axes, *sequence* over 'model' (kv-head
+    counts are ≤ 8 and cannot shard 16 ways; sequence always can).
+  * batch — global batch over data axes when divisible (long_500k has
+    B=1: batch stays replicated and the cache carries all the sharding).
+
+Rules are keyed on parameter tree paths, so they apply uniformly to the
+scan-stacked [n_periods, ...] leaves (leading dim unsharded).
+"""
+from __future__ import annotations
+
+import re
+from typing import Any
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models.config import ModelConfig
+
+
+def _fsdp(mesh) -> tuple[str, ...] | str | None:
+    axes = tuple(a for a in mesh.axis_names if a != "model")
+    return axes if len(axes) > 1 else axes[0]
+
+
+# (path regex, candidate spec builders) — first match wins, then the first
+# candidate whose sharded dims all divide evenly is used (e.g. qwen2-moe's
+# 60 experts can't split 16-way → falls back to TP inside the experts).
+_RULES = [
+    (r"embed$",                 lambda F: [P("model", F), P(None, F)]),
+    (r"lm_head$",               lambda F: [P(F, "model"), P(F, None)]),
+    (r"pos$",                   lambda F: [P(None, F)]),
+    (r"(mixer|xattn)/w[qkv]$",  lambda F: [P(F, "model")]),
+    (r"(mixer|xattn)/wo$",      lambda F: [P("model", F)]),
+    (r"mixer/wo_gate$",         lambda F: [P(F, "model")]),
+    (r"mixer/wif$",             lambda F: [P(F, None)]),
+    (r"mixer/wx$",              lambda F: [P(F, "model")]),
+    (r"mixer/wr$",              lambda F: [P(None, None, "model")]),
+    (r"mixer/in_proj$",         lambda F: [P(F, "model")]),
+    (r"mixer/out_proj$",        lambda F: [P("model", F)]),
+    (r"mixer/conv$",            lambda F: [P(None, "model")]),
+    (r"mixer/x_proj$",          lambda F: [P("model", None)]),
+    (r"mixer/dt_w$",            lambda F: [P(None, "model")]),
+    (r"mixer/dt_bias$",         lambda F: [P("model")]),
+    (r"mixer/A_log$",           lambda F: [P("model", None)]),
+    (r"mixer/D$",               lambda F: [P("model")]),
+    (r"mlp/router$",            lambda F: [P(F, None)]),
+    (r"mlp/w[ig]$",             lambda F: [P("model", F, None),    # EP
+                                           P(None, "model", F)]),  # TP
+    (r"mlp/wo$",                lambda F: [P("model", None, F),
+                                           P(None, "model", F)]),
+    (r"mlp/shared/w[ig]$",      lambda F: [P(F, "model")]),
+    (r"mlp/shared/wo$",         lambda F: [P("model", F)]),
+    (r"norm", lambda F: [P()]),          # replicated norms / biases
+]
+
+# dense (non-MoE) mlp leaves are 2-D: override the 3-D expert rule
+_DENSE_MLP = {
+    "mlp/wi": lambda F: [P(F, "model")],
+    "mlp/wg": lambda F: [P(F, "model")],
+    "mlp/wo": lambda F: [P("model", F)],
+}
+
+
+def _axis_size(mesh, entry) -> int:
+    if entry is None:
+        return 1
+    if isinstance(entry, tuple):
+        n = 1
+        for a in entry:
+            n *= mesh.shape[a]
+        return n
+    return mesh.shape[entry]
+
+
+def _first_valid(cands, shape, mesh) -> P:
+    """First candidate whose sharded dims divide evenly; axes that never
+    divide are dropped entry-wise as a last resort."""
+    for spec in cands:
+        parts = list(spec) + [None] * (len(shape) - len(spec))
+        if all(d % _axis_size(mesh, e) == 0 for d, e in zip(shape, parts)):
+            return spec
+    parts = list(cands[0]) + [None] * (len(shape) - len(cands[0]))
+    fixed = [e if d % _axis_size(mesh, e) == 0 else None
+             for d, e in zip(shape, parts)]
+    return P(*fixed)
+
+
+def _path_str(path) -> str:
+    out = []
+    for k in path:
+        if isinstance(k, jax.tree_util.DictKey):
+            out.append(str(k.key))
+        elif isinstance(k, jax.tree_util.SequenceKey):
+            out.append(str(k.idx))
+    return "/".join(out)
+
+
+def param_specs(cfg: ModelConfig, params_shape: Any, mesh,
+                serve_tp_only: bool = False, fsdp_all: bool = False) -> Any:
+    """PartitionSpec tree matching ``params_shape`` (a ShapeDtypeStruct
+    tree from eval_shape — no allocation needed).
+
+    ``serve_tp_only`` (§Perf variant): replicate weights over the data
+    axes, shard only over 'model' — serving then pays ZERO per-step
+    parameter all-gathers (decode reads every weight every token, so the
+    FSDP gather dominates decode wire traffic).  Applied only when the
+    TP-only per-chip footprint fits HBM; oversized models (jamba-398B)
+    keep 2-D sharding.
+
+    ``fsdp_all`` (§Perf variant): pure ZeRO-3 over the whole mesh, no
+    tensor parallelism.  Per-layer TP partial-sum all-reduces of
+    [B,S,d_model] activations dominate dense train cells (~2 TB/chip/step
+    on deepseek-33B); pure FSDP replaces them with parameter all-gathers
+    (~3× model size), a ~10× wire reduction when params ≪ activations.
+    """
+    F = _fsdp(mesh)
+    if serve_tp_only:
+        per_chip = cfg.approx_params() * 2 / mesh.shape["model"]
+        if per_chip <= 12e9:
+            F = None
+    F_dp = F
+    if fsdp_all:                    # True/"all" or "hybrid"
+        F = tuple(mesh.axis_names)
+
+    def spec_for(path, leaf):
+        ps = _path_str(path)
+        ndim = len(leaf.shape)
+        stacked = "blocks/" in ps          # scan-stacked leading dim
+        base_ndim = ndim - 1 if stacked else ndim
+        base_shape = leaf.shape[1:] if stacked else leaf.shape
+        key = ps.split("blocks/")[-1]
+        key = re.sub(r"^b\d+/", "", key)
+        dense_mlp = re.search(r"mlp/(wi|wg|wo)$", key)
+        fn = None
+        if dense_mlp and base_ndim == 2:
+            cands = _DENSE_MLP["mlp/" + dense_mlp.group(1)](F)
+        else:
+            cands = [P()]
+            for pat, fn in _RULES:
+                if re.search(pat, key):
+                    cands = fn(F)
+                    break
+        if fsdp_all == "hybrid" and dense_mlp and base_ndim == 3:
+            # hybridshard: keep expert parallelism over 'model', FSDP the
+            # rest — MoE models where pure FSDP would gather 100s of GB
+            cands = fn(F_dp)
+        elif fsdp_all:
+            cands = [P(*[None if e == "model" else e for e in c])
+                     for c in cands]
+        spec = _first_valid(cands, base_shape, mesh)
+        parts = list(spec)
+        parts = parts[:base_ndim] + [None] * (base_ndim - len(parts))
+        if stacked:
+            parts = [None] + parts
+        return P(*parts)
+
+    return jax.tree_util.tree_map_with_path(spec_for, params_shape)
+
+
+def batch_specs(cfg: ModelConfig, batch_shape: Any, mesh,
+                fsdp_all: bool = False) -> Any:
+    """Batch dim over data axes when divisible, else replicated."""
+    F = tuple(mesh.axis_names) if fsdp_all else _fsdp(mesh)
+    ndev = 1
+    for a in (F if isinstance(F, tuple) else (F,)):
+        ndev *= mesh.shape[a]
+
+    def spec_for(leaf):
+        b = leaf.shape[0]
+        lead = F if b % ndev == 0 else None
+        return P(lead, *([None] * (len(leaf.shape) - 1)))
+
+    return jax.tree_util.tree_map(spec_for, batch_shape)
+
+
+def cache_specs(cfg: ModelConfig, cache_shape: Any, mesh) -> Any:
+    """KV/state cache: [P, B, T, ...] → batch over data axes (if divisible),
+    sequence (attn) or inner dim (ssm/rnn) over 'model'."""
+    F = _fsdp(mesh)
+    ndev = 1
+    for a in (F if isinstance(F, tuple) else (F,)):
+        ndev *= mesh.shape[a]
+
+    def spec_for(path, leaf):
+        ps = _path_str(path)
+        if ps.endswith("len"):
+            return P()
+        nd = len(leaf.shape)
+        bdim = leaf.shape[1] if nd > 1 else 0
+        bspec = F if (bdim and bdim % ndev == 0) else None
+        name = ps.split("/")[-1]
+        if name in ("k", "v", "xk", "xv"):            # [P,B,T,KH,hd]
+            spec = P(None, bspec, "model", None, None)
+        elif name == "conv":                          # [P,B,K-1,di]
+            spec = P(None, bspec, None, "model")
+        elif name == "h" and nd == 4:                 # mamba [P,B,di,ds]
+            spec = P(None, bspec, "model", None)
+        elif name == "C":                             # mlstm [P,B,H,hd,hd]
+            spec = P(None, bspec, None, "model", None)
+        elif nd == 4:                                 # slstm/mlstm [P,B,H,hd]
+            spec = P(None, bspec, None, "model")
+        elif nd == 3:
+            spec = P(None, bspec, None)
+        else:
+            spec = P(*([None] * nd))
+        return _first_valid([spec], leaf.shape, mesh)
+
+    return jax.tree_util.tree_map_with_path(spec_for, cache_shape)
+
+
+def make_shardings(mesh, spec_tree):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s if s is not None else P()),
+        spec_tree, is_leaf=lambda x: isinstance(x, P) or x is None)

@@ -1,0 +1,87 @@
+"""HLO-text analysis: collective traffic extraction for the roofline.
+
+``cost_analysis()`` gives FLOPs and HBM bytes but not collective bytes, so
+we parse the post-SPMD HLO: every all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute op line carries its result shape and replica
+groups.  Per-chip traffic model (ring schedules):
+
+  all-reduce       2·(n−1)/n · bytes     (reduce-scatter + all-gather)
+  all-gather       (n−1)/n  · bytes      (bytes = full gathered result)
+  reduce-scatter   (n−1)/n  · bytes      (bytes = full input)
+  all-to-all       (n−1)/n  · bytes
+  collective-permute        1 · bytes
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLL_RE = re.compile(
+    r"=\s*(?:\(?)((?:[a-z0-9]+\[[0-9,]*\][^ ]*(?:,\s*)?)+)\)?\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([0-9,]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _GROUPS_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))        # [num_groups, group_size]<=[N]
+    return default
+
+
+def parse_collectives(hlo_text: str, default_group: int = 16) -> dict:
+    """→ {op: {'count', 'result_bytes', 'wire_bytes'}} + totals.
+
+    ``wire_bytes`` is the per-chip traffic under the ring model above.
+    Deduplicates fusion-internal repeats by scanning top-level op lines.
+    """
+    stats: dict = defaultdict(lambda: {"count": 0, "result_bytes": 0,
+                                       "wire_bytes": 0.0})
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m or "-done" in line:
+            continue
+        types, op = m.group(1), m.group(2)
+        size = _shape_bytes(types)
+        n = max(_group_size(line, default_group), 1)
+        if op == "all-reduce":
+            wire = 2.0 * (n - 1) / n * size
+        elif op == "collective-permute":
+            wire = float(size)
+        else:
+            wire = (n - 1) / n * size
+        s = stats[op]
+        s["count"] += 1
+        s["result_bytes"] += size
+        s["wire_bytes"] += wire
+    total = {"count": sum(s["count"] for s in stats.values()),
+             "result_bytes": sum(s["result_bytes"] for s in stats.values()),
+             "wire_bytes": sum(s["wire_bytes"] for s in stats.values())}
+    out = dict(stats)
+    out["total"] = total
+    return out

@@ -1,0 +1,4 @@
+from .cec_router import CECRouter
+from .engine import InferenceEngine, Request
+
+__all__ = ["CECRouter", "InferenceEngine", "Request"]

@@ -1,0 +1,107 @@
+"""CEC router: the paper's control plane driving live serving decisions.
+
+The router owns the JOWR state (Λ, φ) for a fleet of edge devices, each
+hosting one model version.  Every control interval it:
+
+ 1. observes the realized network utility (measured quality-weighted
+    throughput minus flow-model network cost — a black box to the router,
+    exactly the paper's bandit feedback);
+ 2. advances the OMAD single-loop (Alg. 3) one outer iteration — gradient
+    sampling over the perturbed allocations, one mirror-descent routing
+    step per observation;
+ 3. exposes the new admission split Λ/λ (which version serves what share
+    of traffic) and per-replica dispatch weights t_i(w)/λ_w (how much of
+    version w's traffic each deploying device processes).
+
+Node churn (device joins/leaves) rebuilds the graph and *warm-starts* φ
+with an exploration mix — the Fig. 11 online-adaptation behaviour.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import CECGraph, get_cost, propagate, total_cost
+from repro.core.allocation import _observe, _project_box_simplex
+from repro.core.routing import solve_routing
+
+
+@dataclasses.dataclass
+class CECRouter:
+    graph: CECGraph
+    lam_total: float
+    delta: float = 0.5
+    eta_outer: float = 0.05
+    eta_inner: float = 3.0
+    cost_name: str = "exp"
+
+    def __post_init__(self):
+        self.cost = get_cost(self.cost_name)
+        W = self.graph.n_sessions
+        self.lam = jnp.full((W,), self.lam_total / W)
+        self.phi = self.graph.uniform_phi()
+        self.history: list[dict] = []
+
+    # -- the bandit observation the paper assumes ---------------------------
+    def _utility(self, measured_task_utility: float, lam) -> float:
+        return measured_task_utility - float(
+            total_cost(self.graph, self.cost, self.phi, lam))
+
+    def control_step(self, utility_fn) -> dict:
+        """One OMAD outer iteration.  ``utility_fn(lam) -> float`` returns
+        the *measured* task utility for an admitted allocation (the engine
+        serves the perturbed split and reports quality-weighted goodput)."""
+        W = self.graph.n_sessions
+        g = np.zeros(W, np.float32)
+        for w in range(W):
+            ew = jnp.zeros(W).at[w].set(1.0)
+            for sign in (+1.0, -1.0):
+                lam_p = self.lam + sign * self.delta * ew
+                self.phi, _ = solve_routing(self.graph, self.cost, lam_p,
+                                            self.phi, self.eta_inner, 1)
+                u = utility_fn(np.asarray(lam_p)) - float(
+                    total_cost(self.graph, self.cost, self.phi, lam_p))
+                g[w] += sign * u / (2 * self.delta)
+        z = self.eta_outer * (g - g.max())
+        wts = np.asarray(self.lam) * np.exp(z)
+        lam = jnp.asarray(self.lam_total * wts / wts.sum())
+        self.lam = _project_box_simplex(lam, self.lam_total, self.delta)
+        rec = {"lam": np.asarray(self.lam).copy(),
+               "cost": float(total_cost(self.graph, self.cost, self.phi,
+                                        self.lam))}
+        self.history.append(rec)
+        return rec
+
+    # -- dispatch interfaces used by the engine ------------------------------
+    def admission_split(self) -> np.ndarray:
+        """P(version w) for an incoming request."""
+        lam = np.asarray(self.lam)
+        return lam / lam.sum()
+
+    def replica_weights(self) -> np.ndarray:
+        """[W, n_phys] share of version-w traffic each deployed replica
+        processes = t_i(w)/λ_w at the nodes deploying w."""
+        t = np.asarray(propagate(self.graph, self.phi, self.lam))
+        dep = np.asarray(self.graph.deploy)
+        shares = t[:, : self.graph.n_phys] * dep
+        tot = shares.sum(-1, keepdims=True)
+        return shares / np.where(tot > 0, tot, 1.0)
+
+    # -- fault tolerance: node churn -----------------------------------------
+    def on_topology_change(self, new_graph: CECGraph, explore: float = 0.1):
+        """Re-target the running iterates onto a new graph (node fail/join).
+
+        φ restarts from an exploration mix so edges that multiplicative
+        updates had zeroed can be rediscovered (DESIGN.md §5)."""
+        self.graph = new_graph
+        uniform = new_graph.uniform_phi()
+        if self.phi.shape == uniform.shape:
+            mask = new_graph.out_mask
+            mixed = (1 - explore) * self.phi * mask + explore * uniform
+            rowsum = mixed.sum(-1, keepdims=True)
+            self.phi = jnp.where(rowsum > 0, mixed / jnp.where(
+                rowsum > 0, rowsum, 1.0), uniform)
+        else:
+            self.phi = uniform

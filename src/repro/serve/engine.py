@@ -1,0 +1,106 @@
+"""Batched inference engine with continuous batching + CEC dispatch.
+
+One engine instance per model *version*; requests arrive centrally, the
+CEC router's admission split picks the version (= paper's workload
+allocation λ_w), the replica weights pick the serving device (= routing
+φ).  Decode runs real model steps (reduced configs on CPU; the pjit'd
+production path is exercised by the dry-run).
+
+Continuous batching: fixed ``max_batch`` decode slots; finished sequences
+free their slot, queued requests claim slots at every step boundary.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import model as M
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray           # [S] int32
+    max_new_tokens: int = 16
+    version: int = 0
+    replica: int = 0
+    output: list = dataclasses.field(default_factory=list)
+
+    @property
+    def done(self) -> bool:
+        return len(self.output) >= self.max_new_tokens
+
+
+class InferenceEngine:
+    def __init__(self, cfg: ModelConfig, params: Any, max_batch: int = 8,
+                 max_len: int = 128):
+        self.cfg = cfg
+        self.params = params
+        self.max_batch = max_batch
+        self.max_len = max_len
+        self.queue: deque[Request] = deque()
+        self.slots: list[Request | None] = [None] * max_batch
+        self.cache = M.init_cache(cfg, max_batch, max_len)
+        self.tokens_served = 0
+        self._decode = jax.jit(
+            lambda p, t, c: M.decode_step(cfg, p, t, c))
+
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def _admit(self):
+        for i, s in enumerate(self.slots):
+            if s is None and self.queue:
+                req = self.queue.popleft()
+                # prefill this slot (batch-1 prefill, then graft the cache)
+                logits, cache1 = M.prefill(
+                    self.cfg, self.params,
+                    {"tokens": jnp.asarray(req.prompt)[None]},
+                    max_len=self.max_len)
+                # graft the batch-1 cache into slot i ("len" is [B], layer
+                # entries are [P, B, ...])
+                self.cache["len"] = self.cache["len"].at[i].set(
+                    cache1["len"][0])
+                for key in cache1:
+                    if key == "len":
+                        continue
+                    self.cache[key] = jax.tree_util.tree_map(
+                        lambda full, one: full.at[:, i:i + 1].set(
+                            one.astype(full.dtype)),
+                        self.cache[key], cache1[key])
+                req.output.append(int(jnp.argmax(logits[0])))
+                self.slots[i] = req
+
+    def step(self) -> int:
+        """One decode step for all active slots; returns #active."""
+        self._admit()
+        active = [i for i, s in enumerate(self.slots) if s is not None]
+        if not active:
+            return 0
+        toks = np.zeros((self.max_batch, 1), np.int32)
+        for i in active:
+            toks[i, 0] = self.slots[i].output[-1]
+        logits, self.cache = self._decode(self.params,
+                                          jnp.asarray(toks), self.cache)
+        nxt = np.asarray(jnp.argmax(logits, -1))
+        for i in active:
+            req = self.slots[i]
+            req.output.append(int(nxt[i]))
+            self.tokens_served += 1
+            if req.done or len(req.output) + len(req.prompt) >= self.max_len:
+                self.slots[i] = None
+        return len(active)
+
+    def drain(self, max_steps: int = 10_000) -> int:
+        steps = 0
+        while (self.queue or any(s is not None for s in self.slots)) \
+                and steps < max_steps:
+            self.step()
+            steps += 1
+        return steps

@@ -1,0 +1,5 @@
+from .topologies import (abilene, balanced_tree, connected_er, fog, geant,
+                         make_topology)
+
+__all__ = ["abilene", "balanced_tree", "connected_er", "fog", "geant",
+           "make_topology"]

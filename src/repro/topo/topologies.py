@@ -1,0 +1,97 @@
+"""Network topologies used in the paper's evaluation (§IV, Figs. 3–6).
+
+All generators return a symmetric boolean adjacency matrix.  Hardcoded
+topologies follow the standard published edge lists (Abilene/Internet2,
+GEANT (Rossi & Rossini 2011 snapshot), the fog-computing sample of Kamran
+et al. 2019); Balanced-tree and Connected-ER follow the paper's text.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def _from_edges(n: int, edges: list[tuple[int, int]]) -> np.ndarray:
+    adj = np.zeros((n, n), bool)
+    for i, j in edges:
+        adj[i, j] = adj[j, i] = True
+    np.fill_diagonal(adj, False)
+    return adj
+
+
+def connected_er(n: int = 25, p: float = 0.2, seed: int = 0,
+                 max_tries: int = 200) -> np.ndarray:
+    """Connectivity-guaranteed Erdős–Rényi graph (paper's main topology)."""
+    for t in range(max_tries):
+        rng = np.random.default_rng(seed + 7919 * t)
+        adj = rng.random((n, n)) < p
+        adj = np.triu(adj, 1)
+        adj = adj | adj.T
+        if _connected(adj):
+            return adj
+    raise RuntimeError("could not draw a connected ER graph")
+
+
+def _connected(adj: np.ndarray) -> bool:
+    n = adj.shape[0]
+    seen = np.zeros(n, bool)
+    seen[0] = True
+    frontier = [0]
+    while frontier:
+        i = frontier.pop()
+        for j in np.nonzero(adj[i])[0]:
+            if not seen[j]:
+                seen[j] = True
+                frontier.append(int(j))
+    return bool(seen.all())
+
+
+def abilene() -> np.ndarray:
+    """Abilene / Internet2 predecessor: 11 nodes, 14 links (paper Fig. 3)."""
+    # 0 Seattle 1 Sunnyvale 2 LosAngeles 3 Denver 4 KansasCity 5 Houston
+    # 6 Chicago 7 Indianapolis 8 Atlanta 9 WashingtonDC 10 NewYork
+    edges = [(0, 1), (0, 3), (1, 2), (1, 3), (2, 5), (3, 4), (4, 5), (4, 7),
+             (5, 8), (6, 7), (7, 8), (8, 9), (6, 10), (9, 10)]
+    return _from_edges(11, edges)
+
+
+def balanced_tree(branching: int = 2, height: int = 3) -> np.ndarray:
+    """Complete tree (paper Fig. 4; 14 nodes at r=2,h=3 minus one leaf)."""
+    nodes = sum(branching ** h for h in range(height + 1))
+    nodes = min(nodes, 14)                      # paper's |N| = 14
+    edges = [((i - 1) // branching, i) for i in range(1, nodes)]
+    return _from_edges(nodes, edges)
+
+
+def fog() -> np.ndarray:
+    """3-tier fog sample (Kamran et al., DECO) — 15 nodes, 30 links."""
+    # tier0: cloud {0}; tier1: fog nodes {1..4}; tier2: edge devices {5..14}
+    edges = [(0, 1), (0, 2), (0, 3), (0, 4),
+             (1, 2), (2, 3), (3, 4), (4, 1),          # fog ring
+             (1, 3), (2, 4)]                          # fog cross links
+    for d in range(5, 15):
+        f = 1 + (d - 5) % 4
+        edges.append((f, d))                          # primary uplink
+        edges.append((1 + (d - 4) % 4, d))            # backup uplink
+    return _from_edges(15, edges)
+
+
+def geant() -> np.ndarray:
+    """GEANT pan-European research network: 22 nodes, 33 links (Fig. 6)."""
+    edges = [(0, 1), (0, 2), (1, 3), (1, 6), (2, 3), (2, 4), (3, 5), (4, 7),
+             (5, 8), (6, 8), (6, 9), (7, 8), (7, 10), (8, 11), (9, 12),
+             (10, 13), (11, 13), (11, 14), (12, 14), (12, 15), (13, 16),
+             (14, 17), (15, 17), (15, 18), (16, 19), (17, 20), (18, 20),
+             (19, 21), (20, 21), (0, 4), (5, 9), (10, 16), (18, 21)]
+    return _from_edges(22, edges)
+
+
+# paper Table II mean link capacities
+MEAN_CAPACITY = {"connected_er": 10.0, "abilene": 15.0, "balanced_tree": 10.0,
+                 "fog": 10.0, "geant": 10.0}
+
+
+def make_topology(name: str, **kw) -> tuple[np.ndarray, float]:
+    """Returns (adjacency, mean link capacity per paper Table II)."""
+    gens = {"connected_er": connected_er, "abilene": abilene,
+            "balanced_tree": balanced_tree, "fog": fog, "geant": geant}
+    return gens[name](**kw), MEAN_CAPACITY[name]

@@ -1,0 +1,122 @@
+"""Fault-tolerant training runner.
+
+The loop a real cluster job runs on every host:
+
+* resume from the newest complete checkpoint (restart-after-preemption);
+* periodic async-ish checkpointing (save off the step's donated buffers);
+* SIGTERM/SIGINT trap → emergency checkpoint before exit (preemption);
+* transient step failure → bounded retries with the same deterministic
+  batch (the data pipeline is a pure function of step, so a retried step
+  is bit-identical);
+* straggler watermarks — per-step wall time EMA + p95; a step slower than
+  ``straggler_factor``× the EMA is logged.  On real fleets this is the
+  signal to re-mesh (mesh.elastic_mesh) and reshard via checkpoint
+  restore; the elastic path is exercised in tests/test_checkpoint.py by
+  restoring onto a different mesh.
+* optional simulated failures (``fail_at``) prove the recovery path in CI.
+"""
+from __future__ import annotations
+
+import dataclasses
+import signal
+import time
+from typing import Any, Callable
+
+import jax
+import numpy as np
+
+from repro.data import SyntheticLM
+from repro.train import checkpoint as ckpt
+
+
+@dataclasses.dataclass
+class RunnerConfig:
+    total_steps: int = 200
+    ckpt_every: int = 50
+    ckpt_dir: str = "checkpoints/run"
+    keep: int = 3
+    max_retries: int = 2
+    straggler_factor: float = 3.0
+    fail_at: tuple[int, ...] = ()          # simulated transient failures
+
+
+class TrainRunner:
+    def __init__(self, rc: RunnerConfig, step_fn: Callable, params: Any,
+                 opt_state: Any, data: SyntheticLM,
+                 shardings: tuple | None = None):
+        self.rc = rc
+        self.step_fn = step_fn
+        self.params = params
+        self.opt_state = opt_state
+        self.data = data
+        self.shardings = shardings
+        self.metrics_log: list[dict] = []
+        self.step_times: list[float] = []
+        self.stragglers: list[int] = []
+        self._preempted = False
+        self._failed_once: set[int] = set()
+
+    # -- lifecycle ----------------------------------------------------------
+    def _install_signals(self):
+        def handler(signum, frame):
+            self._preempted = True
+        for sig in (signal.SIGTERM, signal.SIGINT):
+            signal.signal(sig, handler)
+
+    def _resume(self) -> int:
+        last = ckpt.latest_step(self.rc.ckpt_dir)
+        if last is None:
+            return 0
+        like = {"params": self.params, "opt": self.opt_state}
+        sh = None
+        if self.shardings is not None:
+            sh = {"params": self.shardings[0], "opt": self.shardings[1]}
+        tree, extra = ckpt.restore(self.rc.ckpt_dir, last, like, sh)
+        self.params, self.opt_state = tree["params"], tree["opt"]
+        print(f"[runner] resumed from step {last}")
+        return int(extra.get("next_step", last))
+
+    def _save(self, step: int):
+        ckpt.save(self.rc.ckpt_dir, step,
+                  {"params": self.params, "opt": self.opt_state},
+                  extra={"next_step": step}, keep=self.rc.keep)
+
+    # -- main loop ----------------------------------------------------------
+    def run(self) -> dict:
+        self._install_signals()
+        start = self._resume()
+        ema = None
+        for step in range(start, self.rc.total_steps):
+            batch = self.data.batch(step)
+            for attempt in range(self.rc.max_retries + 1):
+                try:
+                    if step in self.rc.fail_at and step not in self._failed_once:
+                        self._failed_once.add(step)
+                        raise RuntimeError(f"simulated failure @ step {step}")
+                    t0 = time.time()
+                    self.params, self.opt_state, metrics = self.step_fn(
+                        self.params, self.opt_state, batch)
+                    jax.block_until_ready(metrics["loss"])
+                    dt = time.time() - t0
+                    break
+                except RuntimeError as e:
+                    print(f"[runner] step {step} attempt {attempt} failed: {e}")
+                    if attempt == self.rc.max_retries:
+                        raise
+            ema = dt if ema is None else 0.9 * ema + 0.1 * dt
+            self.step_times.append(dt)
+            if dt > self.rc.straggler_factor * ema and step > start + 5:
+                self.stragglers.append(step)
+                print(f"[runner] straggler: step {step} took {dt:.2f}s "
+                      f"(ema {ema:.2f}s) — re-mesh candidate")
+            self.metrics_log.append(
+                {"step": step, **{k: float(v) for k, v in metrics.items()}})
+            if (step + 1) % self.rc.ckpt_every == 0 or self._preempted:
+                self._save(step + 1)
+                if self._preempted:
+                    print(f"[runner] preempted — saved at {step + 1}")
+                    break
+        else:
+            self._save(self.rc.total_steps)
+        return {"metrics": self.metrics_log, "stragglers": self.stragglers,
+                "mean_step_s": float(np.mean(self.step_times or [0]))}

@@ -1,0 +1,57 @@
+"""Step factories: the functions the launcher jits with shardings.
+
+``make_train_step`` closes over (config, optimizer, schedule) and returns a
+pure (params, opt_state, batch, step) → (params, opt_state, metrics)
+function with remat already applied inside the model's layer scan.
+Optional gradient compression (int8 + error feedback) hooks in before the
+(pjit-inserted) gradient reduction — see parallel/collectives.py.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import model as M
+from repro.models.config import ModelConfig
+from repro.optim import AdamW, cosine_schedule
+
+
+def make_train_step(cfg: ModelConfig, optim: AdamW,
+                    lr_fn: Callable | None = None,
+                    compress_grads: bool = False,
+                    remat: bool = True):
+    lr_fn = lr_fn or partial(cosine_schedule, peak=3e-4, warmup=100,
+                             total=10_000)
+
+    def train_step(params, opt_state, batch):
+        def loss_fn(p):
+            loss, metrics = M.train_loss(cfg, p, batch, remat=remat)
+            return loss, metrics
+
+        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+        if compress_grads:
+            from repro.parallel.collectives import quantize_dequantize_int8
+            grads = jax.tree_util.tree_map(quantize_dequantize_int8, grads)
+        lr = lr_fn(opt_state.step)
+        params, opt_state, gnorm = optim.update(grads, opt_state, params, lr)
+        out = {"loss": loss, "lr": lr, "grad_norm": gnorm, **metrics}
+        return params, opt_state, out
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, max_len: int | None = None):
+    def prefill_step(params, batch):
+        return M.prefill(cfg, params, batch, max_len=max_len)
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig):
+    def decode_step(params, tokens, cache):
+        return M.decode_step(cfg, params, tokens, cache)
+
+    return decode_step

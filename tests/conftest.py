@@ -1,0 +1,39 @@
+import os
+
+# Tests must see the single real CPU device (the 512-device fake platform is
+# reserved for launch/dryrun.py, which sets XLA_FLAGS before importing jax).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def small_cec():
+    """A small feasible CEC instance shared across core tests."""
+    from repro.core import build_random_cec
+    from repro.topo import connected_er
+
+    adj = connected_er(15, 0.3, seed=3)
+    return build_random_cec(adj, 3, 10.0, seed=0)
+
+
+@pytest.fixture(scope="session")
+def er25_cec():
+    """The paper's main Connected-ER(25, 0.2) instance."""
+    from repro.core import build_random_cec
+    from repro.topo import connected_er
+
+    adj = connected_er(25, 0.2, seed=1)
+    return build_random_cec(adj, 3, 10.0, seed=0)
+
+
+def random_phi(graph, seed=0):
+    """A random feasible routing configuration (row-stochastic on mask)."""
+    import jax.numpy as jnp
+
+    rng = np.random.default_rng(seed)
+    raw = rng.uniform(0.1, 1.0, size=graph.out_mask.shape).astype(np.float32)
+    raw = raw * np.asarray(graph.out_mask)
+    s = raw.sum(-1, keepdims=True)
+    return jnp.asarray(np.where(s > 0, raw / np.where(s > 0, s, 1.0), 0.0))

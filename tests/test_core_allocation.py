@@ -1,0 +1,91 @@
+"""GS-OMA / OMAD correctness: convergence to the genie optimum under
+bandit feedback (Thms. 1/2/5), feasibility invariants, utility properties."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (allocation_kkt_residual, exact_gradient_allocation,
+                        get_cost, gs_oma, make_bank, omad, solve_jowr)
+
+LAM_TOTAL = 60.0
+
+
+@pytest.fixture(scope="module")
+def genie(er25_cec):
+    cost = get_cost("exp")
+    bank = make_bank("log", 3, seed=0, lam_total=LAM_TOTAL)
+    lam, phi, U = exact_gradient_allocation(
+        er25_cec, cost, bank, LAM_TOTAL, eta=0.1, outer_iters=200,
+        inner_iters=50, eta_inner=3.0)
+    return bank, lam, U
+
+
+def test_gs_oma_matches_genie(er25_cec, genie):
+    bank, lam_ref, U_ref = genie
+    res = gs_oma(er25_cec, get_cost("exp"), bank, LAM_TOTAL, delta=0.5,
+                 eta_outer=0.05, eta_inner=3.0, outer_iters=80,
+                 inner_iters=40)
+    assert float(res.utility_traj[-1]) > U_ref - 0.05
+    np.testing.assert_allclose(np.asarray(res.lam), np.asarray(lam_ref),
+                               atol=0.6)
+
+
+def test_omad_matches_genie(er25_cec, genie):
+    bank, lam_ref, U_ref = genie
+    res = omad(er25_cec, get_cost("exp"), bank, LAM_TOTAL, delta=0.5,
+               eta_outer=0.05, eta_inner=3.0, outer_iters=300)
+    assert float(res.utility_traj[-1]) > U_ref - 0.05
+    np.testing.assert_allclose(np.asarray(res.lam), np.asarray(lam_ref),
+                               atol=0.6)
+
+
+def test_allocation_feasibility(er25_cec):
+    """Σλ = λ_total and box constraints hold along the whole trajectory."""
+    bank = make_bank("sqrt", 3, seed=1, lam_total=LAM_TOTAL)
+    res = gs_oma(er25_cec, get_cost("exp"), bank, LAM_TOTAL, delta=0.5,
+                 eta_outer=0.05, eta_inner=3.0, outer_iters=30,
+                 inner_iters=20)
+    traj = np.asarray(res.lam_traj)
+    np.testing.assert_allclose(traj.sum(-1), LAM_TOTAL, rtol=1e-4)
+    assert (traj >= 0.5 - 1e-4).all()
+    assert (traj <= LAM_TOTAL - 0.5 + 1e-4).all()
+
+
+def test_allocation_kkt_at_optimum(er25_cec, genie):
+    """Theorem 1: equal ∂U/∂λ_w across sessions at Λ*."""
+    bank, _, _ = genie
+    res = omad(er25_cec, get_cost("exp"), bank, LAM_TOTAL, delta=0.5,
+               eta_outer=0.05, eta_inner=3.0, outer_iters=400)
+    assert float(allocation_kkt_residual(
+        er25_cec, get_cost("exp"), bank, res.lam, res.phi)) < 0.05
+
+
+@pytest.mark.parametrize("kind", ["linear", "sqrt", "quadratic", "log"])
+def test_all_utility_families_converge(small_cec, kind):
+    """Fig. 10: GS-OMA converges for every unknown-utility family."""
+    bank = make_bank(kind, 3, seed=2, lam_total=LAM_TOTAL)
+    res = solve_jowr(small_cec, bank, LAM_TOTAL, method="nested",
+                     eta_outer=0.05, eta_inner=3.0, outer_iters=60,
+                     inner_iters=30)
+    u = np.asarray(res.utility_traj)
+    assert np.isfinite(u).all()
+    # converged: last-10 variation tiny relative to total improvement
+    spread = u[-10:].max() - u[-10:].min()
+    assert spread < 0.05 * max(abs(u[-1] - u[0]), 1.0) + 1e-3
+
+
+@settings(max_examples=20, deadline=None)
+@given(kind=st.sampled_from(["linear", "sqrt", "quadratic", "log"]),
+       seed=st.integers(0, 1000))
+def test_utility_monotone_concave(kind, seed):
+    """Assumptions 1–3 hold for every generated utility bank."""
+    bank = make_bank(kind, 4, seed=seed, lam_total=LAM_TOTAL)
+    lam = jnp.linspace(0.0, LAM_TOTAL, 121)
+    vals = np.asarray(jnp.stack([bank.per_session(jnp.full((4,), l))
+                                 for l in lam]))
+    assert np.isfinite(vals).all()
+    d1 = np.diff(vals, axis=0)
+    assert (d1 >= -1e-4).all(), "utility must be monotone increasing"
+    d2 = np.diff(vals, 2, axis=0)
+    assert (d2 <= 1e-4).all(), "utility must be concave"

@@ -1,0 +1,92 @@
+"""Flow-model invariants: conservation, gradient identities (paper §II-C,
+eq. (18)–(21))."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (cost_and_state, get_cost, link_flows, marginals,
+                        phi_gradient, propagate, total_cost)
+from repro.core.graph import build_random_cec
+from repro.topo import connected_er
+
+from conftest import random_phi
+
+
+def _instance(n, p, seed):
+    return build_random_cec(connected_er(n, p, seed=seed), 3, 10.0, seed=seed)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 10_000), n=st.integers(8, 30))
+def test_flow_conservation(seed, n):
+    """All admitted traffic drains into its sink: t_{D_w}(w) = λ_w."""
+    g = _instance(n, 0.35, seed)
+    phi = random_phi(g, seed)
+    lam = jnp.asarray(np.random.default_rng(seed).uniform(1, 30, g.n_sessions),
+                      jnp.float32)
+    t = propagate(g, phi, lam)
+    sink_rates = np.asarray(t)[np.arange(g.n_sessions), np.asarray(g.sinks)]
+    np.testing.assert_allclose(sink_rates, np.asarray(lam), rtol=2e-5)
+
+
+@settings(max_examples=6, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_node_conservation(seed):
+    """Inflow equals outflow at every relay node (eq. (1))."""
+    g = _instance(16, 0.3, seed)
+    phi = random_phi(g, seed + 1)
+    lam = jnp.array([10.0, 20.0, 30.0])
+    t = propagate(g, phi, lam)
+    f = np.asarray(t[:, :, None] * phi)            # session link flows
+    inject = np.asarray(g.injection(lam))
+    inflow = f.sum(1) + inject                     # [W, Nb]
+    outflow = f.sum(2)
+    # at non-sink nodes, t_i(w) = inflow; outflow = t_i (rows are stochastic
+    # wherever t>0), so inflow == outflow off the sinks
+    sinks = np.asarray(g.sinks)
+    mask = np.ones(g.n_bar, bool)
+    mask[sinks] = False
+    np.testing.assert_allclose(inflow[:, mask], outflow[:, mask],
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("cost_name", ["exp", "mm1", "linear", "quad"])
+def test_marginal_broadcast_matches_autodiff(er25_cec, cost_name):
+    """Gallager's recursion (eq. 18–21) == jax.grad of the flow model."""
+    g = er25_cec
+    cost = get_cost(cost_name)
+    phi = random_phi(g, 7)
+    lam = jnp.array([15.0, 20.0, 25.0])
+
+    _, t, F = cost_and_state(g, cost, phi, lam)
+    delta, _ = marginals(g, cost, phi, t, F)
+    analytic = np.asarray(phi_gradient(t, delta))
+
+    auto = np.asarray(jax.grad(
+        lambda p: total_cost(g, cost, p, lam))(phi))
+    m = np.asarray(g.out_mask) > 0
+    np.testing.assert_allclose(analytic[m], auto[m], rtol=2e-3, atol=2e-3)
+
+
+def test_cost_derivatives_match_value_grad():
+    """CostFn.deriv must equal d/dF of CostFn.value (all registry entries)."""
+    F = jnp.linspace(0.0, 40.0, 97)
+    C = jnp.full_like(F, 10.0)
+    for name in ["exp", "mm1", "linear", "quad"]:
+        c = get_cost(name)
+        g = jax.vmap(jax.grad(lambda f, cc: c.value(f, cc)))(F, C)
+        np.testing.assert_allclose(np.asarray(g), np.asarray(c.deriv(F, C)),
+                                   rtol=1e-4, atol=1e-5, err_msg=name)
+
+
+def test_link_flow_additivity(small_cec):
+    """F_ij = Σ_w t_i(w)φ_ij(w): doubling Λ doubles every link flow."""
+    g = small_cec
+    phi = random_phi(g, 3)
+    lam = jnp.array([5.0, 7.0, 9.0])
+    F1 = link_flows(g, phi, propagate(g, phi, lam))
+    F2 = link_flows(g, phi, propagate(g, phi, 2 * lam))
+    np.testing.assert_allclose(np.asarray(F2), 2 * np.asarray(F1),
+                               rtol=1e-5, atol=1e-5)

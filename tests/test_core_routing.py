@@ -1,0 +1,111 @@
+"""OMD-RT correctness: monotone descent (Thm. 4), global optimality vs the
+independent Frank–Wolfe solver, KKT conditions (Thm. 3), SGP baseline."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (frank_wolfe_routing, get_cost, kkt_residual,
+                        project_simplex_masked, solve_routing,
+                        solve_routing_sgp, total_cost)
+
+from conftest import random_phi
+
+LAM = jnp.array([20.0, 20.0, 20.0])
+
+
+def test_omd_monotone_descent(er25_cec):
+    """Theorem 4: with η ≤ c/L_D every OMD step decreases the cost."""
+    g = er25_cec
+    cost = get_cost("exp")
+    _, traj = solve_routing(g, cost, LAM, g.uniform_phi(), 0.2, 150)
+    traj = np.asarray(traj)
+    assert (np.diff(traj) <= 1e-4).all(), "cost increased along OMD-RT"
+
+
+def test_omd_reaches_frank_wolfe_optimum(er25_cec):
+    g = er25_cec
+    cost = get_cost("exp")
+    phi, _ = solve_routing(g, cost, LAM, g.uniform_phi(), 3.0, 400)
+    d_omd = float(total_cost(g, cost, phi, LAM))
+    _, d_fw = frank_wolfe_routing(g, cost, LAM, n_iters=300)
+    assert abs(d_omd - d_fw) / d_fw < 5e-3, (d_omd, d_fw)
+
+
+def test_omd_kkt_conditions(er25_cec):
+    """Thm. 3: equal marginal costs on the support at φ*."""
+    g = er25_cec
+    cost = get_cost("exp")
+    phi, _ = solve_routing(g, cost, LAM, g.uniform_phi(), 5.0, 800)
+    assert float(kkt_residual(g, cost, phi, LAM)) < 0.02
+
+
+def test_sgp_converges_same_optimum(er25_cec):
+    g = er25_cec
+    cost = get_cost("exp")
+    phi_o, _ = solve_routing(g, cost, LAM, g.uniform_phi(), 3.0, 400)
+    phi_s, _ = solve_routing_sgp(g, cost, LAM, g.uniform_phi(), 0.5, 400)
+    d_o = float(total_cost(g, cost, phi_o, LAM))
+    d_s = float(total_cost(g, cost, phi_s, LAM))
+    assert abs(d_o - d_s) / d_o < 1e-2
+
+
+def test_omd_faster_than_sgp_early(er25_cec):
+    """The paper's headline: OMD-RT leads SGP in the first iterations."""
+    g = er25_cec
+    cost = get_cost("exp")
+    _, tr_o = solve_routing(g, cost, LAM, g.uniform_phi(), 3.0, 10)
+    _, tr_s = solve_routing_sgp(g, cost, LAM, g.uniform_phi(), 0.5, 10)
+    assert float(tr_o[-1]) <= float(tr_s[-1]) + 1e-3
+
+
+def test_rows_remain_stochastic(er25_cec):
+    g = er25_cec
+    cost = get_cost("exp")
+    phi, _ = solve_routing(g, cost, LAM, g.uniform_phi(), 3.0, 50)
+    rows = np.asarray(phi).sum(-1)
+    has_out = np.asarray(g.out_mask).sum(-1) > 0
+    np.testing.assert_allclose(rows[has_out], 1.0, atol=1e-5)
+    assert (np.asarray(phi) >= 0).all()
+    assert (np.asarray(phi)[np.asarray(g.out_mask) == 0] == 0).all()
+
+
+# ---------------------------------------------------------------------------
+# masked simplex projection (the SGP per-node QP)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=40, deadline=None)
+@given(data=st.data(), d=st.integers(2, 12))
+def test_simplex_projection_feasible(data, d):
+    y = np.array(data.draw(st.lists(
+        st.floats(-5, 5, allow_nan=False, width=32), min_size=d, max_size=d)),
+        np.float32)
+    mask = np.array(data.draw(st.lists(st.booleans(), min_size=d, max_size=d)),
+                    np.float32)
+    if mask.sum() == 0:
+        mask[0] = 1.0
+    v = np.asarray(project_simplex_masked(jnp.asarray(y)[None],
+                                          jnp.asarray(mask)[None]))[0]
+    assert (v >= -1e-6).all()
+    assert abs(v.sum() - 1.0) < 1e-4
+    assert (v[mask == 0] == 0).all()
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_simplex_projection_is_closest_point(seed):
+    """Projection beats random feasible points in Euclidean distance."""
+    rng = np.random.default_rng(seed)
+    d = 8
+    y = rng.normal(size=d).astype(np.float32) * 3
+    mask = (rng.random(d) > 0.3).astype(np.float32)
+    if mask.sum() == 0:
+        mask[:] = 1.0
+    v = np.asarray(project_simplex_masked(jnp.asarray(y)[None],
+                                          jnp.asarray(mask)[None]))[0]
+    dv = ((v - y) ** 2).sum()
+    for _ in range(64):
+        z = rng.random(d) * mask
+        z = z / z.sum()
+        assert dv <= ((z - y) ** 2).sum() + 1e-4

@@ -1,0 +1,154 @@
+"""Per-arch smoke tests (deliverable f) + KV-cache/state parity checks."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config
+from repro.models import model as M
+
+KEY = jax.random.PRNGKey(0)
+
+
+def make_batch(cfg, B=2, S=16, seed=0):
+    rng = np.random.default_rng(seed)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab, (B, S)), jnp.int32)
+    batch = {"tokens": toks}
+    if cfg.enc_dec:
+        # audio frontend stub: precomputed frame embeddings feed the encoder
+        enc = rng.normal(size=(B, cfg.enc_seq, cfg.d_model)) * 0.02
+        batch["enc_embeds"] = jnp.asarray(enc, cfg.dtype)
+    elif cfg.frontend:
+        # vision frontend stub: precomputed patch embeddings replace tokens
+        emb = rng.normal(size=(B, S, cfg.d_model)) * 0.02
+        batch = {"embeds": jnp.asarray(emb, cfg.dtype), "labels": toks}
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_arch_smoke_train_step(arch):
+    """Reduced config: one forward/train step, shape + finiteness asserts."""
+    cfg = get_config(arch, smoke=True)
+    params = M.init(cfg, KEY)
+    batch = make_batch(cfg)
+    loss, metrics = M.train_loss(cfg, params, batch)
+    assert loss.shape == ()
+    assert np.isfinite(float(loss)), f"{arch}: NaN loss"
+    logits, aux = M.forward(cfg, params, batch)
+    assert logits.shape == (2, 16, cfg.vocab)
+    assert np.isfinite(np.asarray(logits, np.float32)).all()
+    # gradients flow and are finite
+    g = jax.grad(lambda p: M.train_loss(cfg, p, batch)[0])(params)
+    leaves = jax.tree_util.tree_leaves(g)
+    assert all(np.isfinite(np.asarray(l, np.float32)).all() for l in leaves)
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_arch_smoke_prefill_decode(arch):
+    cfg = get_config(arch, smoke=True)
+    params = M.init(cfg, KEY)
+    batch = make_batch(cfg)
+    logits, cache = M.prefill(cfg, params, batch, max_len=24)
+    assert logits.shape == (2, cfg.vocab)
+    for _ in range(3):
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
+        logits, cache = M.decode_step(cfg, params, tok, cache)
+        assert np.isfinite(np.asarray(logits, np.float32)).all(), arch
+    assert (np.asarray(cache["len"]) == 19).all()
+
+
+@pytest.mark.parametrize("arch", ["deepseek-coder-33b", "jamba-1.5-large-398b",
+                                  "xlstm-1.3b", "whisper-large-v3",
+                                  "qwen2-vl-72b"])
+def test_decode_matches_forward(arch):
+    """Autoregressive cache path must reproduce the parallel forward pass.
+
+    Covers every mixer kind: attn KV cache, mamba SSM+conv state,
+    mLSTM/sLSTM recurrent state, cross-attention cache, M-RoPE offsets.
+    """
+    cfg = dataclasses.replace(get_config(arch, smoke=True), dtype="float32")
+    if cfg.moe is not None:
+        # capacity drops are batch-size dependent by design; parity needs a
+        # drop-free capacity so the cache path sees identical expert outputs
+        cfg = dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=16.0))
+    params = M.init(cfg, KEY)
+    B, S = 2, 12
+    batch = make_batch(cfg, B, S, seed=1)
+
+    full_logits, _ = M.forward(cfg, params, batch)        # [B,S,V]
+
+    # prefill on the first S0 tokens, then decode the rest one by one
+    S0 = 7
+    pre = {k: (v[:, :S0] if k in ("tokens", "embeds", "labels") else v)
+           for k, v in batch.items()}
+    logits, cache = M.prefill(cfg, params, pre, max_len=S)
+    np.testing.assert_allclose(np.asarray(logits),
+                               np.asarray(full_logits[:, S0 - 1]),
+                               rtol=2e-3, atol=2e-3)
+    if cfg.frontend and not cfg.enc_dec:
+        return  # decode continues from tokens; prefix was raw embeds
+    for s in range(S0, S):
+        tok = batch["tokens"][:, s:s + 1]
+        logits, cache = M.decode_step(cfg, params, tok, cache)
+        np.testing.assert_allclose(
+            np.asarray(logits), np.asarray(full_logits[:, s]),
+            rtol=2e-3, atol=2e-3,
+            err_msg=f"{arch} step {s}")
+
+
+def test_moe_dispatch_capacity_drops_are_bounded():
+    """With capacity_factor ≥ 1 and balanced tokens, few drops occur and
+    the output stays close to a dense-evaluation oracle."""
+    cfg = get_config("qwen2-moe-a2.7b", smoke=True)
+    cfg = dataclasses.replace(cfg, dtype="float32")
+    from repro.models import layers as L
+    moe = cfg.moe
+    params = L.moe_init(cfg, KEY)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 32, cfg.d_model),
+                          jnp.float32) * 0.5
+    y, aux = L.moe_apply(cfg, params, x)
+    assert np.isfinite(np.asarray(y)).all()
+    assert y.shape == x.shape
+    # dense oracle: evaluate every expert on every token, combine by gates
+    T = 64
+    xt = x.reshape(T, cfg.d_model)
+    logits = xt @ params["router"]
+    probs = jax.nn.softmax(logits.astype(jnp.float32), -1)
+    gval, gidx = jax.lax.top_k(probs, moe.top_k)
+    gval = gval / gval.sum(-1, keepdims=True)
+    h = jax.nn.silu(jnp.einsum("td,edf->tef", xt, params["wi"]))
+    h = h * jnp.einsum("td,edf->tef", xt, params["wg"])
+    ye = jnp.einsum("tef,efd->ted", h, params["wo"])
+    dense = jnp.zeros_like(xt)
+    for k in range(moe.top_k):
+        dense = dense + gval[:, k, None] * jnp.take_along_axis(
+            ye, gidx[:, k, None, None].repeat(cfg.d_model, -1), 1)[:, 0]
+    dense = dense + L.mlp_apply(cfg, params["shared"], xt)
+    # capacity drops make this approximate; demand 95% token agreement
+    err = np.linalg.norm(np.asarray(y.reshape(T, -1) - dense), axis=-1)
+    scale = np.linalg.norm(np.asarray(dense), axis=-1) + 1e-6
+    assert (err / scale < 1e-3).mean() > 0.9
+
+
+def test_param_count_analytics():
+    """approx_params matches the published sizes within tolerance."""
+    expect = {"deepseek-coder-33b": 33e9, "smollm-135m": 135e6,
+              "jamba-1.5-large-398b": 398e9, "qwen2-moe-a2.7b": 14.3e9,
+              "xlstm-1.3b": 1.3e9, "qwen2-vl-72b": 72e9}
+    for arch, n in expect.items():
+        got = get_config(arch).approx_params()
+        assert abs(got - n) / n < 0.25, (arch, got, n)
+
+
+def test_long_context_applicability():
+    from repro.configs import applicable
+    ok, _ = applicable(get_config("jamba-1.5-large-398b"), "long_500k")
+    assert ok
+    ok, _ = applicable(get_config("xlstm-1.3b"), "long_500k")
+    assert ok
+    for arch in ("deepseek-coder-33b", "qwen2-vl-72b", "whisper-large-v3"):
+        ok, why = applicable(get_config(arch), "long_500k")
+        assert not ok and why

@@ -1,0 +1,41 @@
+"""All-to-all expert-parallel MoE vs dense oracle (8 fake devices)."""
+import os
+import subprocess
+import sys
+
+
+def test_moe_a2a_matches_dense_oracle():
+    env = dict(os.environ,
+               XLA_FLAGS="--xla_force_host_platform_device_count=8",
+               PYTHONPATH="src")
+    code = """
+import jax, jax.numpy as jnp, numpy as np
+from repro.launch.mesh import make_mesh
+from repro.parallel.moe_a2a import moe_a2a_apply, moe_dense_oracle
+
+mesh = make_mesh((2, 4), ("data", "model"))
+E, D, F = 8, 32, 64
+ks = jax.random.split(jax.random.PRNGKey(0), 4)
+params = {
+    "router": jax.random.normal(ks[0], (D, E)) * 0.5,
+    "wi": jax.random.normal(ks[1], (E, D, F)) / jnp.sqrt(D),
+    "wo": jax.random.normal(ks[2], (E, F, D)) / jnp.sqrt(F),
+}
+x = jax.random.normal(ks[3], (4, 16, D)) * 0.5
+
+# capacity chosen drop-free so the comparison is exact
+got = moe_a2a_apply(mesh, params, x, capacity_factor=16.0)
+want = moe_dense_oracle(params, x)
+np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                           rtol=2e-4, atol=2e-4)
+
+# HLO actually contains all-to-alls (the point of the schedule)
+lowered = jax.jit(lambda p, xx: moe_a2a_apply(mesh, p, xx,
+                                              capacity_factor=16.0))
+txt = lowered.lower(params, x).compile().as_text()
+assert "all-to-all" in txt, "expected all-to-all dispatch in HLO"
+print("A2A_OK")
+"""
+    r = subprocess.run([sys.executable, "-c", code], env=env,
+                       capture_output=True, text=True, cwd="/root/repo")
+    assert "A2A_OK" in r.stdout, r.stdout + r.stderr

@@ -1,0 +1,151 @@
+"""Distribution layer: sharding rules, collectives, annotations, and a
+reduced-mesh end-to-end pjit train step executed on 8 fake devices."""
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.parallel.collectives import (dequantize_int8,
+                                        error_feedback_compress,
+                                        quantize_dequantize_int8,
+                                        quantize_int8)
+
+
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(0, 10_000), scale=st.floats(1e-3, 1e3))
+def test_int8_roundtrip_error_bound(seed, scale):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(64,)) * scale, jnp.float32)
+    q, s = quantize_int8(x)
+    back = dequantize_int8(q, s)
+    amax = float(jnp.abs(x).max())
+    assert float(jnp.abs(back - x).max()) <= amax / 127.0 + 1e-7
+
+
+def test_error_feedback_is_unbiased_over_steps():
+    """Accumulated EF residual keeps the long-run mean exact."""
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(256,)), jnp.float32)
+    resid = jnp.zeros_like(x)
+    total = jnp.zeros_like(x)
+    n = 50
+    for _ in range(n):
+        out, resid = error_feedback_compress(x, resid)
+        total = total + out
+    np.testing.assert_allclose(np.asarray(total / n), np.asarray(x),
+                               atol=2e-2)
+
+
+def test_quantize_dequantize_preserves_zero_and_dtype():
+    x = jnp.zeros((8, 8), jnp.bfloat16)
+    y = quantize_dequantize_int8(x)
+    assert y.dtype == x.dtype
+    assert float(jnp.abs(y).max()) == 0.0
+
+
+def _run_subprocess(code: str, ndev: int = 8) -> str:
+    env = dict(os.environ,
+               XLA_FLAGS=f"--xla_force_host_platform_device_count={ndev}",
+               PYTHONPATH="src")
+    r = subprocess.run([sys.executable, "-c", code], env=env,
+                       capture_output=True, text=True, cwd="/root/repo")
+    assert r.returncode == 0, r.stdout + r.stderr
+    return r.stdout
+
+
+def test_ring_all_reduce_matches_psum():
+    out = _run_subprocess("""
+import jax, jax.numpy as jnp, numpy as np
+from repro.launch.mesh import make_mesh
+from repro.parallel.collectives import ring_all_reduce
+mesh = make_mesh((4, 2), ("data", "model"))
+x = jnp.arange(32.0).reshape(8, 4)
+got = ring_all_reduce(x, mesh, axis="data")
+np.testing.assert_allclose(np.asarray(got), 4 * np.asarray(x), rtol=1e-6)
+print("RING_OK")
+""")
+    assert "RING_OK" in out
+
+
+def test_pjit_train_step_runs_on_fake_mesh():
+    """Real execution (not just lowering) of the sharded train step on a
+    2×4 mesh; loss decreases over 3 steps."""
+    out = _run_subprocess("""
+import jax, jax.numpy as jnp, numpy as np
+from repro.configs import get_config
+from repro.data import batch_for_step
+from repro.launch.mesh import make_mesh, dp_axes
+from repro.models import model as M
+from repro.optim import AdamW
+from repro.parallel.annotate import activation_sharding
+from repro.parallel.sharding import batch_specs, make_shardings, param_specs
+from repro.train.steps import make_train_step
+
+cfg = get_config("smollm-135m", smoke=True)
+mesh = make_mesh((2, 4), ("data", "model"))
+params = M.init(cfg, jax.random.PRNGKey(0))
+optim = AdamW()
+opt = optim.init(params)
+pspec = make_shardings(mesh, param_specs(
+    cfg, jax.tree_util.tree_map(lambda l: jax.ShapeDtypeStruct(l.shape, l.dtype), params), mesh))
+params = jax.tree_util.tree_map(jax.device_put, params, pspec)
+opt = type(opt)(step=opt.step, mu=jax.tree_util.tree_map(jax.device_put, opt.mu, pspec),
+                nu=jax.tree_util.tree_map(jax.device_put, opt.nu, pspec))
+batch = batch_for_step(0, 0, 4, 32, cfg.vocab)
+bspec = make_shardings(mesh, batch_specs(cfg, batch, mesh))
+batch = jax.tree_util.tree_map(jax.device_put, batch, bspec)
+with mesh, activation_sharding(mesh, dp_axes(mesh)):
+    step = jax.jit(make_train_step(cfg, optim, remat=False))
+    losses = []
+    for s in range(3):
+        b = jax.tree_util.tree_map(jax.device_put,
+                                   batch_for_step(0, s, 4, 32, cfg.vocab), bspec)
+        params, opt, m = step(params, opt, b)
+        losses.append(float(m["loss"]))
+print("LOSSES", losses)
+assert losses[-1] < losses[0]
+print("PJIT_OK")
+""")
+    assert "PJIT_OK" in out
+
+
+def test_param_specs_divisibility_everywhere():
+    """Every rule-produced spec must divide its dim for every arch on the
+    production meshes (this is what made granite/qwen2-moe compile)."""
+    code = """
+import jax
+from repro.configs import ARCH_IDS, get_config
+from repro.launch.mesh import make_mesh
+from repro.models import model as M
+from repro.parallel.sharding import param_specs
+
+mesh = make_mesh((2, 4), ("data", "model"))
+for arch in ARCH_IDS:
+    cfg = get_config(arch)
+    shapes = jax.eval_shape(lambda k: M.init(cfg, k), jax.random.PRNGKey(0))
+    specs = param_specs(cfg, shapes, mesh)
+    def check(path, leaf, spec):
+        for d, e in zip(leaf.shape, tuple(spec) + (None,) * 9):
+            if e is None: continue
+            axes = e if isinstance(e, tuple) else (e,)
+            n = 1
+            for a in axes: n *= mesh.shape[a]
+            assert d % n == 0, (arch, path, leaf.shape, spec)
+    jax.tree_util.tree_map_with_path(
+        lambda p, l, s: check(p, l, s), shapes, specs)
+print("SPECS_OK")
+"""
+    out = _run_subprocess(code)
+    assert "SPECS_OK" in out
+
+
+def test_annotate_noop_without_mapping():
+    from repro.parallel.annotate import data_parallel_size, shard
+    x = jnp.ones((4, 4))
+    assert shard(x, "batch", "model") is x
+    assert data_parallel_size() == 1

@@ -1,0 +1,76 @@
+"""Batched JOWR engine: per-instance wall-clock for batch sizes {1, 8, 32}.
+
+Measures the tentpole claim directly: solving B Connected-ER(25, .2)
+instances as one vmapped XLA program (``solve_jowr_batch``) vs a Python
+loop of jitted per-instance ``solve_jowr`` calls over the same draws.
+Reports seconds/instance for both and the batching speedup.
+``measure_seq_vs_batched`` is the single implementation of that
+measurement — the §Perf control-plane cell in perf_iterations.py reuses
+it with its own B/outer_iters.
+
+On a single-core CPU the vmapped program can lose to the loop at large B
+(batched einsums trade cache locality for parallel width); the speedup
+column is the signal to watch on parallel backends, where the instance
+axis maps onto hardware.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.core import (CECGraphBatch, build_random_cec, make_bank,
+                        solve_jowr, solve_jowr_batch, stack_banks)
+from repro.topo import connected_er
+
+from .common import dump, emit, timeit
+
+LAM_TOTAL = 60.0
+OUTER = 30
+B_MAX = 32
+
+
+def measure_seq_vs_batched(B: int, outer_iters: int,
+                           graphs=None, banks=None) -> tuple[float, float]:
+    """(sequential seconds, batched seconds) for the same B-instance OMAD
+    ensemble: a Python loop of jitted ``solve_jowr`` calls vs one jitted
+    ``solve_jowr_batch`` program."""
+    kw = dict(method="single", eta_outer=0.05, eta_inner=3.0,
+              outer_iters=outer_iters)
+    if graphs is None:
+        graphs = [build_random_cec(connected_er(25, 0.2, seed=1 + s), 3,
+                                   10.0, seed=s) for s in range(B)]
+    if banks is None:
+        banks = [make_bank("log", 3, seed=s, lam_total=LAM_TOTAL)
+                 for s in range(B)]
+    graphs, banks = graphs[:B], banks[:B]
+
+    seq = jax.jit(lambda g, bk: solve_jowr(g, bk, LAM_TOTAL, **kw))
+    _, t_seq = timeit(lambda: [seq(g, bk) for g, bk in zip(graphs, banks)])
+
+    batch = CECGraphBatch.from_graphs(graphs)
+    fn = jax.jit(lambda bk: solve_jowr_batch(batch, bk, LAM_TOTAL, **kw))
+    _, t_batched = timeit(fn, stack_banks(banks))
+    return t_seq, t_batched
+
+
+def main() -> list[dict]:
+    graphs = [build_random_cec(connected_er(25, 0.2, seed=1 + s), 3, 10.0,
+                               seed=s) for s in range(B_MAX)]
+    banks = [make_bank("log", 3, seed=s, lam_total=LAM_TOTAL)
+             for s in range(B_MAX)]
+
+    rows = []
+    for B in (1, 8, 32):
+        t_seq, t_batched = measure_seq_vs_batched(B, OUTER, graphs, banks)
+        row = {"B": B, "outer_iters": OUTER,
+               "batched_s_per_instance": t_batched / B,
+               "sequential_s_per_instance": t_seq / B,
+               "speedup": t_seq / t_batched}
+        rows.append(row)
+        emit(f"bench_batched.B{B}", t_batched / B,
+             f"seq={t_seq/B*1e6:.1f}us/inst;speedup={t_seq/t_batched:.2f}x")
+    dump("bench_batched", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,4 +1,9 @@
-"""Paper Figs. 8–9: total cost and running time vs network size n."""
+"""Paper Figs. 8–9: total cost and running time vs network size n.
+
+Each size point is an ensemble of B random instances solved on the batched
+path — one vmapped XLA program per method — with per-instance wall-clock
+reported as batched-time/B; OPT is Frank–Wolfe per instance.
+"""
 from __future__ import annotations
 
 import time
@@ -7,36 +12,46 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (build_random_cec, frank_wolfe_routing, get_cost,
-                        solve_routing, solve_routing_sgp)
+from repro.core import (CECGraphBatch, build_random_cec, frank_wolfe_routing,
+                        get_cost, solve_routing_batch)
 from repro.topo import connected_er
 
 from .common import dump, emit, timeit
 
 LAM = jnp.array([20.0, 20.0, 20.0])
 ITERS = 50
+B = 4
 
 
 def main() -> list[dict]:
     cost = get_cost("exp")
     rows = []
     for n in (20, 25, 30, 35, 40):
-        g = build_random_cec(connected_er(n, 0.2, seed=1), 3, 10.0, seed=0)
-        phi0 = g.uniform_phi()
-        omd = jax.jit(lambda p, g=g: solve_routing(g, cost, LAM, p, 3.0, ITERS))
-        sgp = jax.jit(lambda p, g=g: solve_routing_sgp(g, cost, LAM, p, 0.5,
-                                                       ITERS))
+        graphs = [build_random_cec(connected_er(n, 0.2, seed=1 + s), 3, 10.0,
+                                   seed=s) for s in range(B)]
+        batch = CECGraphBatch.from_graphs(graphs)
+        phi0 = batch.uniform_phi()
+        omd = jax.jit(lambda p, b=batch: solve_routing_batch(
+            b, cost, LAM, p, 3.0, ITERS))
+        sgp = jax.jit(lambda p, b=batch: solve_routing_batch(
+            b, cost, LAM, p, 0.5, ITERS, method="sgp"))
         (_, tr_o), t_o = timeit(omd, phi0)
         (_, tr_s), t_s = timeit(sgp, phi0)
         t0 = time.perf_counter()
-        _, d_opt = frank_wolfe_routing(g, cost, LAM, n_iters=150)
-        t_opt = time.perf_counter() - t0
-        row = {"n": n, "omd_cost": float(tr_o[-1]), "sgp_cost": float(tr_s[-1]),
-               "opt_cost": d_opt, "omd_s": t_o, "sgp_s": t_s, "opt_s": t_opt}
+        d_opt = np.array([frank_wolfe_routing(g, cost, LAM, n_iters=150)[1]
+                          for g in graphs])
+        t_opt = (time.perf_counter() - t0) / B
+        tr_o, tr_s = np.asarray(tr_o), np.asarray(tr_s)
+        row = {"n": n, "n_instances": B,
+               "omd_cost": float(tr_o[:, -1].mean()),
+               "sgp_cost": float(tr_s[:, -1].mean()),
+               "opt_cost": float(d_opt.mean()),
+               "omd_s": t_o / B, "sgp_s": t_s / B, "opt_s": t_opt}
         rows.append(row)
-        emit(f"fig8_9.n{n}.omd", t_o, f"cost={tr_o[-1]:.3f};opt={d_opt:.3f}")
-        emit(f"fig8_9.n{n}.sgp", t_s, f"cost={tr_s[-1]:.3f}")
-        emit(f"fig8_9.n{n}.opt_fw", t_opt, f"cost={d_opt:.3f}")
+        emit(f"fig8_9.n{n}.omd", t_o / B,
+             f"B={B};cost={row['omd_cost']:.3f};opt={row['opt_cost']:.3f}")
+        emit(f"fig8_9.n{n}.sgp", t_s / B, f"B={B};cost={row['sgp_cost']:.3f}")
+        emit(f"fig8_9.n{n}.opt_fw", t_opt, f"cost={row['opt_cost']:.3f}")
     dump("fig8_9_network_size", rows)
     return rows
 

@@ -9,6 +9,11 @@ Cells (selection rationale in EXPERIMENTS.md):
   deepseek-coder-33b × train_4k   — most collective-bound baseline
   qwen2-vl-72b × decode_32k       — worst roofline fraction (serving)
   jamba-1.5-large-398b × train_4k — paper-scale MoE/hybrid, memory-bound
+
+Plus one control-plane cell on the batched JOWR path: sequential jitted
+per-instance solves vs one vmapped ``solve_jowr_batch`` program over the
+same ensemble (hypothesis: vmap amortizes per-solve dispatch and compiles
+one fused scan → per-instance time drops).
 """
 from __future__ import annotations
 
@@ -45,7 +50,32 @@ HYPOTHESES = {
     "hybridshard": "FSDP dense weights + expert-parallel MoE: drops TP "
                    "activation all-reduces on the non-expert 78%% of the "
                    "model → wire ≈ −25%",
+    "batched_vmap": "one vmapped solve_jowr_batch program over B instances "
+                    "amortizes per-solve dispatch vs a Python loop of "
+                    "jitted solves → per-instance time drops",
 }
+
+
+def control_plane_rows(B: int = 8) -> list[dict]:
+    """Batched control-plane cell: sequential vs vmapped JOWR ensemble."""
+    from .bench_batched import measure_seq_vs_batched
+
+    t_seq, t_bat = measure_seq_vs_batched(B, outer_iters=20)
+
+    verdict = "confirmed" if t_bat < t_seq * 0.95 else (
+        "neutral" if t_bat < t_seq * 1.05 else "refuted")
+    rows = [
+        {"arch": "cec_control_plane", "shape": f"omad_B{B}",
+         "variant": "sequential", "s_per_instance": t_seq / B},
+        {"arch": "cec_control_plane", "shape": f"omad_B{B}",
+         "variant": "batched_vmap", "hypothesis": HYPOTHESES["batched_vmap"],
+         "verdict": verdict, "s_per_instance": t_bat / B,
+         "speedup": t_seq / t_bat},
+    ]
+    emit(f"perf.cec_control_plane.omad_B{B}.sequential", t_seq / B, "baseline")
+    emit(f"perf.cec_control_plane.omad_B{B}.batched_vmap", t_bat / B,
+         f"speedup={t_seq/t_bat:.2f}x;{verdict}")
+    return rows
 
 
 def run_variant(arch: str, shape: str, variant: str,
@@ -69,7 +99,7 @@ def main() -> list[dict]:
     from repro.configs import SHAPES, get_config
     from repro.roofline.analysis import analytic_bytes, roofline_terms
 
-    rows = []
+    rows = control_plane_rows()
     for arch, shape, variants in CELLS:
         base = run_variant(arch, shape, "baseline")
         cfg = get_config(arch)

@@ -12,7 +12,8 @@ import traceback
 
 MODULES = ("fig7_routing_convergence", "fig8_9_network_size",
            "fig10_utility_functions", "fig11_single_loop",
-           "table2_topologies", "bench_kernels", "perf_iterations")
+           "table2_topologies", "bench_kernels", "bench_batched",
+           "perf_iterations")
 
 
 def main() -> None:

@@ -1,17 +1,24 @@
-"""Paper Table II + Figs. 12–15: OMD-RT across the four named topologies."""
+"""Paper Table II + Figs. 12–15: OMD-RT across the four named topologies.
+
+Each topology row is an ensemble of B capacity/deployment draws on the
+fixed adjacency, solved on the batched path (one vmapped OMD-RT program);
+OPT is Frank–Wolfe per instance and the paper's "iterations to within 1%
+of OPT" statistic is averaged over the ensemble.
+"""
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (build_random_cec, frank_wolfe_routing, get_cost,
-                        solve_routing)
+from repro.core import (CECGraphBatch, build_random_cec, frank_wolfe_routing,
+                        get_cost, solve_routing_batch)
 from repro.topo import make_topology
 
 from .common import dump, emit, timeit
 
 LAM = jnp.array([15.0, 15.0, 15.0])
+B = 4
 
 
 def main() -> list[dict]:
@@ -19,21 +26,34 @@ def main() -> list[dict]:
     rows = []
     for name in ("abilene", "balanced_tree", "fog", "geant"):
         adj, cbar = make_topology(name)
-        g = build_random_cec(adj, 3, cbar, seed=0)
-        phi0 = g.uniform_phi()
-        omd = jax.jit(lambda p, g=g: solve_routing(g, cost, LAM, p, 3.0, 150))
+        graphs = [build_random_cec(adj, 3, cbar, seed=s) for s in range(B)]
+        batch = CECGraphBatch.from_graphs(graphs)
+        phi0 = batch.uniform_phi()
+        omd = jax.jit(lambda p, b=batch: solve_routing_batch(
+            b, cost, LAM, p, 3.0, 150))
         (_, traj), secs = timeit(omd, phi0)
-        _, d_opt = frank_wolfe_routing(g, cost, LAM, n_iters=200)
-        traj = np.asarray(traj)
-        # iterations to within 1% of OPT
-        within = np.nonzero(traj <= d_opt * 1.01)[0]
-        it99 = int(within[0]) if within.size else -1
-        row = {"topology": name, "n": g.n_phys, "cbar": cbar,
-               "omd_final": float(traj[-1]), "opt": d_opt, "iters_to_1pct": it99}
+        traj = np.asarray(traj)                           # [B, 150]
+        d_opt = np.array([frank_wolfe_routing(g, cost, LAM, n_iters=200)[1]
+                          for g in graphs])
+        # per-instance iterations to within 1% of OPT; -1 = never reached,
+        # excluded from the ensemble mean so the statistic stays honest
+        it99 = []
+        for b in range(B):
+            within = np.nonzero(traj[b] <= d_opt[b] * 1.01)[0]
+            it99.append(int(within[0]) if within.size else -1)
+        reached = [i for i in it99 if i >= 0]
+        row = {"topology": name, "n": batch.n_phys, "cbar": cbar,
+               "n_instances": B,
+               "omd_final": float(traj[:, -1].mean()),
+               "opt": float(d_opt.mean()),
+               "iters_to_1pct": float(np.mean(reached)) if reached else -1.0,
+               "n_not_within_1pct": B - len(reached),
+               "iters_to_1pct_per_instance": it99}
         rows.append(row)
-        emit(f"table2.{name}", secs,
-             f"cost={traj[-1]:.3f};opt={d_opt:.3f};it_1pct={it99}")
-        assert traj[-1] <= d_opt * 1.02, name
+        emit(f"table2.{name}", secs / B,
+             f"B={B};cost={row['omd_final']:.3f};opt={row['opt']:.3f};"
+             f"it_1pct={row['iters_to_1pct']:.1f}")
+        assert (traj[:, -1] <= d_opt * 1.02).all(), name
     dump("table2_topologies", rows)
     return rows
 

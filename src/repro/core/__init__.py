@@ -1,5 +1,8 @@
 """Core CEC control plane: the paper's JOWR contribution in JAX."""
+from . import dispatch
 from .allocation import JOWRResult, allocation_kkt_residual, gs_oma
+from .batch import (CECGraphBatch, pad_graph, solve_jowr_batch,
+                    solve_routing_batch, stack_banks)
 from .costs import CostFn, get as get_cost
 from .flow import cost_and_state, link_flows, propagate, total_cost
 from .graph import CECGraph, InfeasibleTopology, build_augmented, build_random_cec
@@ -20,4 +23,6 @@ __all__ = [
     "frank_wolfe_routing", "RoutingState", "kkt_residual", "omd_step",
     "project_simplex_masked", "sgp_step", "solve_routing",
     "solve_routing_sgp", "omad", "UtilityBank", "make_bank",
+    "CECGraphBatch", "pad_graph", "solve_jowr_batch", "solve_routing_batch",
+    "stack_banks", "dispatch",
 ]

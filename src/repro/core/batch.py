@@ -1,0 +1,241 @@
+"""Batched multi-instance JOWR: solve an ensemble in one XLA program.
+
+The paper's evaluation (§IV, Figs. 7–11, Table II) reports every curve as an
+average over many random instance draws.  Solving those draws one at a time
+from Python wastes the fact that ``gs_oma``/``omad`` are pure scanned JAX:
+``CECGraphBatch`` stacks B augmented graphs into one pytree (padding draws
+of different physical size to a common augmented size, DESIGN.md §9.1) and
+``solve_jowr_batch`` / ``solve_routing_batch`` ``jax.vmap`` the existing
+scan over the instance axis, returning stacked results.
+
+Padding is exact, not approximate: pad nodes get no edges (all-zero masks),
+unit capacity on masked-out links (the ``CECGraph`` convention for unused
+entries), and the shared ``depth_max`` is the batch maximum — extra Jacobi
+relaxation steps past an instance's own longest path are no-ops at the flow
+fixed point, so a padded instance reproduces its standalone trajectory.
+Virtual nodes are re-indexed so that ``src``/``sinks`` land at the same
+(static) positions for every instance; all instances must share the session
+count W.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import costs as _costs
+from .allocation import JOWRResult
+from .graph import CECGraph
+from .jowr import Method, solve_jowr
+from .routing import solve_routing, solve_routing_sgp
+from .utility import UtilityBank
+
+Array = jnp.ndarray
+
+
+def pad_graph(graph: CECGraph, n_phys: int,
+              depth_max: int | None = None) -> CECGraph:
+    """Embed ``graph`` into an augmented graph with ``n_phys`` physical nodes.
+
+    Physical nodes keep their indices; pad nodes ``[graph.n_phys, n_phys)``
+    are isolated (no allowed out-edges, never deployed); the virtual source
+    and sinks are relocated to the tail positions ``n_phys`` and
+    ``n_phys + 1 + w``.  The padded instance is solve-equivalent to the
+    original (see module docstring).
+    """
+    if n_phys < graph.n_phys:
+        raise ValueError(f"cannot shrink graph: {graph.n_phys} -> {n_phys}")
+    depth_max = graph.depth_max if depth_max is None else depth_max
+    if depth_max < graph.depth_max:
+        raise ValueError("depth_max must not decrease")
+    if n_phys == graph.n_phys and depth_max == graph.depth_max:
+        return graph
+
+    W = graph.n_sessions
+    n_bar = n_phys + 1 + W
+    # old augmented index -> new augmented index
+    idx = np.concatenate([np.arange(graph.n_phys), [n_phys],
+                          n_phys + 1 + np.arange(W)])
+
+    out_mask = np.zeros((W, n_bar, n_bar), np.float32)
+    edge_mask = np.zeros((n_bar, n_bar), np.float32)
+    capacity = np.ones((n_bar, n_bar), np.float32)
+    for w in range(W):
+        out_mask[w][np.ix_(idx, idx)] = np.asarray(graph.out_mask[w])
+    edge_mask[np.ix_(idx, idx)] = np.asarray(graph.edge_mask)
+    capacity[np.ix_(idx, idx)] = np.asarray(graph.capacity)
+
+    deploy = np.zeros((W, n_phys), bool)
+    deploy[:, : graph.n_phys] = np.asarray(graph.deploy)
+
+    return CECGraph(
+        out_mask=jnp.asarray(out_mask),
+        edge_mask=jnp.asarray(edge_mask),
+        capacity=jnp.asarray(capacity),
+        deploy=jnp.asarray(deploy),
+        sinks=jnp.asarray(n_phys + 1 + np.arange(W)),
+        n_phys=n_phys,
+        n_sessions=W,
+        n_bar=n_bar,
+        depth_max=depth_max,
+        src=n_phys,
+    )
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class CECGraphBatch:
+    """B CEC instances stacked on a leading axis, sharing static metadata.
+
+    Built with :meth:`from_graphs`; consumed by ``solve_jowr_batch`` and
+    ``solve_routing_batch`` which vmap the per-instance solvers over axis 0.
+    """
+
+    # --- data (pytree leaves, leading axis = instance) ---
+    out_mask: jax.Array      # [B, W, Nb, Nb]
+    edge_mask: jax.Array     # [B, Nb, Nb]
+    capacity: jax.Array      # [B, Nb, Nb]
+    deploy: jax.Array        # [B, W, N]
+    sinks: jax.Array         # [B, W]
+    # --- static metadata (shared across instances) ---
+    n_instances: int = dataclasses.field(metadata=dict(static=True))
+    n_phys: int = dataclasses.field(metadata=dict(static=True))
+    n_sessions: int = dataclasses.field(metadata=dict(static=True))
+    n_bar: int = dataclasses.field(metadata=dict(static=True))
+    depth_max: int = dataclasses.field(metadata=dict(static=True))
+    src: int = dataclasses.field(metadata=dict(static=True))
+
+    @classmethod
+    def from_graphs(cls, graphs: Sequence[CECGraph]) -> "CECGraphBatch":
+        """Stack instances, padding to the common augmented size."""
+        if not graphs:
+            raise ValueError("need at least one graph")
+        W = graphs[0].n_sessions
+        if any(g.n_sessions != W for g in graphs):
+            raise ValueError("all instances must share the session count W")
+        n_phys = max(g.n_phys for g in graphs)
+        depth_max = max(g.depth_max for g in graphs)
+        padded = [pad_graph(g, n_phys, depth_max) for g in graphs]
+        stack = lambda name: jnp.stack([getattr(g, name) for g in padded])
+        return cls(
+            out_mask=stack("out_mask"),
+            edge_mask=stack("edge_mask"),
+            capacity=stack("capacity"),
+            deploy=stack("deploy"),
+            sinks=stack("sinks"),
+            n_instances=len(padded),
+            n_phys=n_phys,
+            n_sessions=W,
+            n_bar=padded[0].n_bar,
+            depth_max=depth_max,
+            src=padded[0].src,
+        )
+
+    def _graph(self, leaves) -> CECGraph:
+        return CECGraph(*leaves, n_phys=self.n_phys,
+                        n_sessions=self.n_sessions, n_bar=self.n_bar,
+                        depth_max=self.depth_max, src=self.src)
+
+    def stacked_graph(self) -> CECGraph:
+        """A ``CECGraph`` view whose leaves carry the instance axis.
+
+        Static metadata is shared, so ``jax.vmap(fn)(batch.stacked_graph())``
+        maps ``fn`` over instances with zero data movement.
+        """
+        return self._graph((self.out_mask, self.edge_mask, self.capacity,
+                            self.deploy, self.sinks))
+
+    def instance(self, b: int) -> CECGraph:
+        """Materialize instance ``b`` as a standalone ``CECGraph``."""
+        return self._graph((self.out_mask[b], self.edge_mask[b],
+                            self.capacity[b], self.deploy[b], self.sinks[b]))
+
+    def uniform_phi(self) -> jax.Array:
+        """[B, W, Nb, Nb] uniform routing per instance."""
+        return self.stacked_graph().uniform_phi()
+
+
+def stack_banks(banks: Sequence[UtilityBank]) -> UtilityBank:
+    """Stack per-instance utility banks (same family/noise) along axis 0."""
+    kind, noise = banks[0].kind, banks[0].noise
+    if any(b.kind != kind or b.noise != noise for b in banks):
+        raise ValueError("all banks must share kind and noise level")
+    return UtilityBank(a=jnp.stack([b.a for b in banks]),
+                       b=jnp.stack([b.b for b in banks]),
+                       kind=kind, noise=noise)
+
+
+def _bank_axis(bank: UtilityBank):
+    """0 when the bank carries an instance axis, None to broadcast one."""
+    return 0 if bank.a.ndim == 2 else None
+
+
+def solve_jowr_batch(
+    batch: CECGraphBatch,
+    banks: UtilityBank | Sequence[UtilityBank],
+    lam_total: float,
+    *,
+    method: Method = "single",
+    cost_name: str = "exp",
+    delta: float = 0.5,
+    eta_outer: float = 0.05,
+    eta_inner: float = 0.05,
+    outer_iters: int = 100,
+    inner_iters: int = 50,
+    phi0: Array | None = None,
+    lam0: Array | None = None,
+) -> JOWRResult:
+    """Solve every instance of ``batch`` in one vmapped program.
+
+    ``banks`` is either a list of per-instance banks (stacked internally), a
+    pre-stacked bank with ``a``/``b`` of shape [B, W], or a single bank
+    (shape [W]) broadcast to every instance.  ``phi0``/``lam0``, when given,
+    must carry a leading instance axis.  Returns a ``JOWRResult`` whose
+    fields are stacked over instances: ``lam`` [B, W], ``phi``
+    [B, W, Nb, Nb], ``utility_traj`` [B, T], ``lam_traj`` [B, T, W].
+    """
+    if not isinstance(banks, UtilityBank):
+        banks = stack_banks(list(banks))
+
+    def one(graph, bank, phi0, lam0):
+        return solve_jowr(graph, bank, lam_total, method=method,
+                          cost_name=cost_name, delta=delta,
+                          eta_outer=eta_outer, eta_inner=eta_inner,
+                          outer_iters=outer_iters, inner_iters=inner_iters,
+                          phi0=phi0, lam0=lam0)
+
+    in_axes = (0, _bank_axis(banks),
+               None if phi0 is None else 0,
+               None if lam0 is None else 0)
+    return jax.vmap(one, in_axes=in_axes)(
+        batch.stacked_graph(), banks, phi0, lam0)
+
+
+def solve_routing_batch(
+    batch: CECGraphBatch,
+    cost: _costs.CostFn,
+    lam: Array,
+    phi0: Array,
+    eta: float,
+    n_iters: int,
+    *,
+    method: str = "omd",
+) -> tuple[Array, Array]:
+    """Vmapped routing oracle: OMD-RT (or SGP) over the instance axis.
+
+    ``lam`` is [W] (broadcast) or [B, W]; ``phi0`` is [B, W, Nb, Nb] (use
+    ``batch.uniform_phi()``).  Returns (φ [B, W, Nb, Nb], cost trajectories
+    [B, n_iters]).
+    """
+    solver = {"omd": solve_routing, "sgp": solve_routing_sgp}[method]
+
+    def one(graph, lam, phi0):
+        return solver(graph, cost, lam, phi0, eta, n_iters)
+
+    lam = jnp.asarray(lam)
+    lam_axis = 0 if lam.ndim == 2 else None
+    return jax.vmap(one, in_axes=(0, lam_axis, 0))(
+        batch.stacked_graph(), lam, phi0)

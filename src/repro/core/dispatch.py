@@ -1,0 +1,99 @@
+"""Size-based kernel dispatch for the control-plane hot path (DESIGN.md §9.2).
+
+The jnp einsum implementations in ``core/flow.py`` / ``core/routing.py`` are
+the right tool for paper-scale graphs (n̄ ≲ a few hundred): XLA fuses them
+and padding to the TPU's 128-lane blocks would only waste work.  At fleet
+scale (n̄ = 10³–10⁵) the same steps are served by the Pallas kernels in
+``kernels/``: when :func:`use_kernels` says so, ``flow.propagate`` routes
+each relaxation step through ``kernels.flow_step`` and ``routing.omd_step``
+routes the exponentiated-gradient update through ``kernels.omd_update``.
+Operand padding to the 128-block constraint (and slicing back) is handled
+by ``kernels/ops.py``.
+
+Dispatch policy: the graph must clear the node-count threshold
+(:func:`kernel_threshold`, default 256), **and** the backend must be a real
+TPU — *or* the threshold must have been set explicitly (the
+``REPRO_KERNEL_NBAR_THRESHOLD`` environment variable,
+:func:`set_kernel_threshold`, or the :func:`kernel_dispatch` context
+manager).  Off-TPU the kernels run in Pallas ``interpret`` mode, which is
+orders of magnitude slower than the fused einsums — correct for validating
+the kernel path everywhere (tests and benchmarks opt in via
+``kernel_dispatch``), wrong as a silent default for a large graph on CPU.
+
+The dispatch decision is made at **trace time** against the *static*
+``CECGraph.n_bar`` metadata, so both branches stay jit/vmap compatible and
+no control flow enters the compiled program.  The flip side: a function
+that was already jit-compiled keeps the branch it was traced with —
+``kernel_dispatch`` / ``set_kernel_threshold`` only affect functions traced
+while the override is active, and are silent no-ops for cached traces.
+Trace (or re-jit) inside the override when you need the kernel path.
+"""
+from __future__ import annotations
+
+import contextlib
+import os
+
+import jax
+
+DEFAULT_THRESHOLD = int(os.environ.get("REPRO_KERNEL_NBAR_THRESHOLD", "256"))
+
+_threshold = DEFAULT_THRESHOLD
+# Explicit configuration (env var / setter / context manager) opts in to the
+# interpret-mode kernel path off-TPU; by default kernels need real TPUs.
+_explicit = "REPRO_KERNEL_NBAR_THRESHOLD" in os.environ
+
+
+def kernel_threshold() -> int:
+    """Augmented node count n̄ at which the Pallas path takes over."""
+    return _threshold
+
+
+def set_kernel_threshold(n: int | None) -> None:
+    """Set the dispatch threshold explicitly; ``None`` restores defaults.
+
+    An explicit threshold also enables the kernel path off-TPU (interpret
+    mode).  Only affects functions traced after the call (see module
+    docstring).
+    """
+    global _threshold, _explicit
+    if n is None:
+        _threshold = DEFAULT_THRESHOLD
+        _explicit = "REPRO_KERNEL_NBAR_THRESHOLD" in os.environ
+    else:
+        _threshold = int(n)
+        _explicit = True
+
+
+@contextlib.contextmanager
+def kernel_dispatch(threshold: int):
+    """Temporarily force the dispatch threshold (tests/benchmarks).
+
+    ``with kernel_dispatch(1): ...`` sends every flow/OMD step traced
+    inside the block through the Pallas kernels regardless of graph size
+    or backend (interpret mode off-TPU).  Functions jit-compiled *before*
+    entering the block keep their cached jnp-path trace.
+    """
+    global _threshold, _explicit
+    prev = (_threshold, _explicit)
+    _threshold, _explicit = int(threshold), True
+    try:
+        yield
+    finally:
+        _threshold, _explicit = prev
+
+
+def use_kernels(n_bar: int) -> bool:
+    """True when a graph of ``n_bar`` augmented nodes should use kernels.
+
+    Requires clearing the threshold and either a real TPU backend or an
+    explicit threshold override (interpret mode is a validation tool, not
+    a production fallback — it is far slower than the jnp path).
+    """
+    if n_bar < _threshold:
+        return False
+    return _explicit or jax.default_backend() == "tpu"
+
+
+def kernel_interpret() -> bool:
+    """Pallas ``interpret`` mode everywhere except real TPU backends."""
+    return jax.default_backend() != "tpu"

@@ -9,15 +9,23 @@ point of paper eq. (1)/(2):
 Because φ is loop-free by construction (DAG orientation — see graph.py), the
 fixed point is reached exactly after ``depth_max`` Jacobi relaxation steps,
 implemented as a ``lax.scan`` of masked batched mat-vecs.  This is the
-control-plane hot loop; at fleet scale the same step is served by the Pallas
-``flow_step`` kernel (kernels/flow_step.py) and the W/node axes shard over
-the mesh.
+control-plane hot loop, and it is size-dispatched (core/dispatch.py): when
+``dispatch.use_kernels(n_bar)`` holds — graph clears the threshold (default
+256, env ``REPRO_KERNEL_NBAR_THRESHOLD``) on a TPU backend, or under an
+explicit override like ``dispatch.kernel_dispatch(n)`` — each relaxation
+step runs through the Pallas ``flow_step`` kernel, operands zero-padded to
+the kernel's 128-lane blocks by ``kernels/ops.py`` and sliced back
+(``interpret=True`` off-TPU).  Otherwise graphs keep the fused einsum.  The
+dispatch keys on static metadata at trace time, so both branches jit, scan
+and vmap (the batched multi-instance path in core/batch.py goes through the
+same code).
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
+from . import dispatch
 from .costs import CostFn
 from .graph import CECGraph
 
@@ -28,8 +36,16 @@ def propagate(graph: CECGraph, phi: Array, lam: Array) -> Array:
     """Session rates t[W, Nb] induced by routing φ and allocation Λ."""
     inject = graph.injection(lam)
 
-    def step(t, _):
-        return inject + jnp.einsum("wi,wij->wj", t, phi), None
+    if dispatch.use_kernels(graph.n_bar):
+        from repro.kernels.ops import flow_step_op
+
+        interpret = dispatch.kernel_interpret()
+
+        def step(t, _):
+            return flow_step_op(t, phi, inject, interpret=interpret), None
+    else:
+        def step(t, _):
+            return inject + jnp.einsum("wi,wij->wj", t, phi), None
 
     t, _ = jax.lax.scan(step, inject, None, length=graph.depth_max)
     return t

@@ -9,6 +9,16 @@ each node's out-edge simplex, eq. (22))
 The row max of −η·δφ is subtracted before exponentiation (renormalization
 makes the update shift-invariant) so the step is overflow-free for any η.
 
+The update is size-dispatched (core/dispatch.py): when
+``dispatch.use_kernels(n_bar)`` holds — graph clears the threshold (default
+256, env ``REPRO_KERNEL_NBAR_THRESHOLD``) on a TPU backend, or under an
+explicit override like ``dispatch.kernel_dispatch(n)`` — the update runs
+the fused Pallas ``omd_update`` kernel: one VMEM pass over 128-row blocks,
+padded/sliced by ``kernels/ops.py``, ``interpret=True`` off-TPU.  Otherwise
+it keeps the jnp expression below.  η must be a Python float on the kernel
+path (it is a static kernel parameter); every caller in this repo passes a
+literal.
+
 SGP is the scaled-gradient-projection baseline (Xi & Yeh 2008 / Bertsekas,
 Gafni & Gallager 1984): a diagonally-scaled projected-gradient step whose
 projection onto the masked simplex is the closed-form QP solve — this is the
@@ -21,6 +31,7 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
+from . import dispatch
 from .costs import CostFn
 from .flow import cost_and_state
 from .graph import CECGraph
@@ -41,6 +52,12 @@ def omd_step(graph: CECGraph, cost: CostFn, phi: Array, lam: Array,
     D, t, F = cost_and_state(graph, cost, phi, lam)
     delta, _ = marginals(graph, cost, phi, t, F)
     mask = graph.out_mask
+    if dispatch.use_kernels(graph.n_bar):
+        from repro.kernels.ops import omd_update_op
+
+        new_phi = omd_update_op(phi, delta, mask, float(eta),
+                                interpret=dispatch.kernel_interpret())
+        return RoutingState(new_phi, D)
     logits = jnp.where(mask > 0, -eta * delta, _NEG)
     logits = logits - jnp.max(logits, axis=-1, keepdims=True)
     w = phi * jnp.exp(logits) * mask

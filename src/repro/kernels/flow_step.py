@@ -3,7 +3,14 @@
 t' = inject + t·Φ for all sessions — a batched vector×matrix product, the
 inner-loop hot spot of OMD-RT at fleet scale (N = 10³–10⁵ nodes).  Tiled
 128×128 over Φ with an f32 VMEM accumulator; the session axis is the
-outermost grid dim (shards over the mesh in the distributed control plane).
+outermost grid dim.
+
+This kernel is live in the solver: ``core.flow.propagate`` dispatches each
+relaxation step here when ``dispatch.use_kernels(n_bar)`` holds — threshold
+cleared (default 256) on TPU, or an explicit override (see
+core/dispatch.py).  Callers go through ``kernels.ops.flow_step_op``, which
+zero-pads the node axes to the 128-block constraint asserted below and
+slices the result back; off-TPU the dispatch passes ``interpret=True``.
 """
 from __future__ import annotations
 

@@ -4,6 +4,16 @@ One VMEM pass per row block: mask → shift by row max → exp → row sum →
 renormalize.  Fusing the five elementwise/reduction ops avoids four HBM
 round-trips of the [W,N,N] routing tensor — the dominant data movement of
 a control-plane iteration at fleet scale.
+
+This kernel is live in the solver: ``core.routing.omd_step`` dispatches the
+exponentiated-gradient update here when ``dispatch.use_kernels(n_bar)``
+holds — threshold cleared (default 256) on TPU, or an explicit override
+(see core/dispatch.py) — via ``kernels.ops.omd_update_op`` which zero-pads
+both
+node axes to the 128-row block constraint asserted below (padded rows have
+all-zero mask and fall through to ``phi`` unchanged before being sliced
+off).  η is a static kernel parameter — a Python float, baked into the
+compiled grid program.  Off-TPU the dispatch passes ``interpret=True``.
 """
 from __future__ import annotations
 

@@ -2,9 +2,14 @@
 
 Each op pads its operands to hardware-aligned tiles, invokes the kernel
 (``interpret=True`` on CPU — the TPU path flips the flag), and slices the
-padding back off.  ``use_pallas(default)`` is the global switch the model
-and control plane consult; on this CPU container the jnp refs are the
-execution path and the kernels are validated in interpret mode.
+padding back off.  The control plane consults ``core.dispatch``:
+``flow_step_op`` / ``omd_update_op`` are invoked by ``core.flow.propagate``
+and ``core.routing.omd_step`` whenever ``dispatch.use_kernels(n_bar)``
+holds (threshold cleared on TPU, or an explicit override), with
+``interpret=dispatch.kernel_interpret()`` (True off-TPU).  Padding rules: both node axes go to multiples of 128 with
+zeros — zero-padded φ rows contribute nothing to ``flow_step`` accumulation,
+and all-zero-mask rows in ``omd_update`` fall through to the input φ before
+being sliced off, so padding is exact.
 """
 from __future__ import annotations
 

@@ -19,6 +19,17 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+try:                                  # newer jax: public API
+    from jax import shard_map as _shard_map
+except ImportError:                   # jax 0.4.x: experimental namespace
+    from jax.experimental.shard_map import shard_map as _shard_map
+# the replication-check kwarg was renamed check_rep -> check_vma in a
+# different release than the public export, so feature-detect it
+import inspect as _inspect
+
+_SM_KW = {("check_vma" if "check_vma" in
+           _inspect.signature(_shard_map).parameters else "check_rep"): False}
+
 
 def quantize_int8(x):
     """x → (int8 payload, f32 scale)."""
@@ -77,7 +88,5 @@ def ring_all_reduce(x, mesh, axis: str = "data"):
         chunks = jax.lax.fori_loop(0, n - 1, ag_step, chunks)
         return jnp.reshape(chunks, block.shape)
 
-    other = tuple(a for a in mesh.axis_names if a != axis)
-    inspec = P(axis) if x.shape[0] % n == 0 else P()
-    return jax.shard_map(ring, mesh=mesh, in_specs=P(),
-                         out_specs=P(), check_vma=False)(x)
+    return _shard_map(ring, mesh=mesh, in_specs=P(),
+                      out_specs=P(), **_SM_KW)(x)

@@ -15,6 +15,13 @@ hosting one model version.  Every control interval it:
 
 Node churn (device joins/leaves) rebuilds the graph and *warm-starts* φ
 with an exploration mix — the Fig. 11 online-adaptation behaviour.
+
+The router's observe path runs through ``core.flow`` / ``core.routing``
+and therefore inherits the size-based kernel dispatch (core/dispatch.py)
+for free: a fleet whose augmented graph clears the threshold serves its
+flow-propagation and mirror-descent steps from the Pallas kernels on TPU
+backends (off-TPU the kernels engage only under an explicit override, in
+interpret mode) with no change here.
 """
 from __future__ import annotations
 

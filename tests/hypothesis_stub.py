@@ -1,0 +1,52 @@
+"""Fallback for environments without ``hypothesis`` installed.
+
+Test modules import this when ``from hypothesis import ...`` fails, so
+only the property-based tests skip — the rest of the module still runs:
+
+    try:
+        from hypothesis import given, settings, strategies as st
+    except ModuleNotFoundError:
+        from hypothesis_stub import given, settings, st
+
+``given`` replaces the test with an argument-less skip stub (no fixture
+resolution is attempted on the hypothesis strategy parameters);
+``settings`` is a pass-through; ``st`` swallows any strategy expression
+evaluated at decoration time.
+"""
+from __future__ import annotations
+
+import pytest
+
+_REASON = "hypothesis is not installed (pip install -r requirements-dev.txt)"
+
+
+class _AnyStrategy:
+    """Accepts any ``st.<strategy>(...)`` chain used at decoration time."""
+
+    def __getattr__(self, name):
+        return lambda *a, **k: self
+
+    def __call__(self, *a, **k):
+        return self
+
+
+st = _AnyStrategy()
+
+
+def settings(*args, **kwargs):
+    if args and callable(args[0]):          # bare @settings
+        return args[0]
+    return lambda fn: fn                    # @settings(...)
+
+
+def given(*args, **kwargs):
+    def deco(fn):
+        @pytest.mark.skip(reason=_REASON)
+        def stub():
+            pass
+
+        stub.__name__ = fn.__name__
+        stub.__doc__ = fn.__doc__
+        return stub
+
+    return deco

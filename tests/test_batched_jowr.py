@@ -1,0 +1,200 @@
+"""Batched multi-instance JOWR path + kernel dispatch (DESIGN.md §9).
+
+(a) ``solve_jowr_batch`` over stacked instances must reproduce the
+    per-instance ``solve_jowr`` trajectories — vmap and depth/size padding
+    are exact, not approximate.
+(b) The size-based kernel dispatch (``core.dispatch``) must be transparent:
+    forcing the Pallas path (interpret mode) through ``flow.propagate`` /
+    ``routing.omd_step`` matches both the jnp solver path and the einsum
+    oracles in ``kernels/ref.py``.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (CECGraphBatch, build_random_cec, dispatch, get_cost,
+                        make_bank, pad_graph, solve_jowr, solve_jowr_batch,
+                        solve_routing, solve_routing_batch, stack_banks)
+from repro.core.flow import propagate
+from repro.core.routing import omd_step
+from repro.kernels import ref
+from repro.kernels.ops import flow_step_op, omd_update_op
+from repro.topo import connected_er
+
+LAM_TOTAL = 60.0
+KW = dict(method="single", eta_outer=0.05, eta_inner=3.0, outer_iters=25)
+
+
+@pytest.fixture(scope="module")
+def er_ensemble():
+    graphs = [build_random_cec(connected_er(15, 0.3, seed=10 + s), 3, 8.0,
+                               seed=s) for s in range(4)]
+    banks = [make_bank("log", 3, seed=s, lam_total=LAM_TOTAL)
+             for s in range(4)]
+    return graphs, banks
+
+
+# ---------------------------------------------------------------------------
+# (a) batched solve == sequential solves
+# ---------------------------------------------------------------------------
+
+def test_batched_matches_sequential(er_ensemble):
+    graphs, banks = er_ensemble
+    batch = CECGraphBatch.from_graphs(graphs)
+    res = solve_jowr_batch(batch, stack_banks(banks), LAM_TOTAL, **KW)
+    assert res.utility_traj.shape == (4, KW["outer_iters"])
+    for b in range(4):
+        want = solve_jowr(graphs[b], banks[b], LAM_TOTAL, **KW)
+        np.testing.assert_allclose(np.asarray(res.utility_traj[b]),
+                                   np.asarray(want.utility_traj),
+                                   rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(np.asarray(res.lam[b]),
+                                   np.asarray(want.lam),
+                                   rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(np.asarray(res.phi[b]),
+                                   np.asarray(want.phi),
+                                   rtol=1e-5, atol=1e-5)
+
+
+def test_batched_broadcasts_single_bank(er_ensemble):
+    graphs, _ = er_ensemble
+    bank = make_bank("sqrt", 3, seed=7, lam_total=LAM_TOTAL)
+    batch = CECGraphBatch.from_graphs(graphs[:2])
+    res = solve_jowr_batch(batch, bank, LAM_TOTAL, **KW)
+    want = solve_jowr(graphs[1], bank, LAM_TOTAL, **KW)
+    np.testing.assert_allclose(np.asarray(res.utility_traj[1]),
+                               np.asarray(want.utility_traj),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_batch_pads_mixed_physical_sizes():
+    """Instances of different N embed exactly into the common size."""
+    g_small = build_random_cec(connected_er(12, 0.35, seed=2), 3, 8.0, seed=0)
+    g_big = build_random_cec(connected_er(15, 0.3, seed=3), 3, 8.0, seed=1)
+    batch = CECGraphBatch.from_graphs([g_small, g_big])
+    assert batch.n_phys == 15 and batch.n_bar == g_big.n_bar
+    bank = make_bank("log", 3, seed=0, lam_total=LAM_TOTAL)
+    res = solve_jowr_batch(batch, bank, LAM_TOTAL, **KW)
+    for b, g in enumerate([g_small, g_big]):
+        want = solve_jowr(g, bank, LAM_TOTAL, **KW)
+        np.testing.assert_allclose(np.asarray(res.utility_traj[b]),
+                                   np.asarray(want.utility_traj),
+                                   rtol=1e-4, atol=1e-3)
+
+
+def test_pad_graph_preserves_solution(small_cec):
+    """Relaxation steps past an instance's own depth are fixed-point no-ops."""
+    padded = pad_graph(small_cec, small_cec.n_phys + 5,
+                       small_cec.depth_max + 3)
+    lam = jnp.array([15.0, 20.0, 25.0])
+    t0 = np.asarray(propagate(small_cec, small_cec.uniform_phi(), lam))
+    t1 = np.asarray(propagate(padded, padded.uniform_phi(), lam))
+    np.testing.assert_allclose(t1[:, : small_cec.n_phys],
+                               t0[:, : small_cec.n_phys], rtol=1e-5,
+                               atol=1e-5)
+    # the relocated virtual source/sinks carry the same rates
+    np.testing.assert_allclose(t1[:, padded.src], t0[:, small_cec.src],
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_solve_routing_batch_matches_sequential(er_ensemble):
+    graphs, _ = er_ensemble
+    batch = CECGraphBatch.from_graphs(graphs)
+    cost = get_cost("exp")
+    lam = jnp.array([15.0, 15.0, 15.0])
+    phi, traj = solve_routing_batch(batch, cost, lam, batch.uniform_phi(),
+                                    3.0, 30)
+    assert traj.shape == (4, 30)
+    for b in range(4):
+        want_phi, want_traj = solve_routing(graphs[b], cost, lam,
+                                            graphs[b].uniform_phi(), 3.0, 30)
+        np.testing.assert_allclose(np.asarray(traj[b]),
+                                   np.asarray(want_traj),
+                                   rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(np.asarray(phi[b]), np.asarray(want_phi),
+                                   rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# (b) kernel dispatch (interpret=True) == einsum references
+# ---------------------------------------------------------------------------
+
+def test_dispatch_flow_matches_jnp_path(er25_cec):
+    g = er25_cec
+    lam = jnp.array([10.0, 20.0, 30.0])
+    phi = g.uniform_phi()
+    assert not dispatch.use_kernels(g.n_bar)      # default: jnp path
+    want = propagate(g, phi, lam)
+    with dispatch.kernel_dispatch(1):
+        assert dispatch.use_kernels(g.n_bar)
+        got = propagate(g, phi, lam)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_dispatch_omd_matches_jnp_path(er25_cec):
+    g = er25_cec
+    cost = get_cost("exp")
+    lam = jnp.array([20.0, 20.0, 20.0])
+    phi = g.uniform_phi()
+    want = omd_step(g, cost, phi, lam, 1.0).phi
+    with dispatch.kernel_dispatch(1):
+        got = omd_step(g, cost, phi, lam, 1.0).phi
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_dispatch_full_routing_solve(er25_cec):
+    """Kernels inside the scanned oracle: trajectories must agree."""
+    g = er25_cec
+    cost = get_cost("exp")
+    lam = jnp.array([20.0, 20.0, 20.0])
+    phi0 = g.uniform_phi()
+    want_phi, want_traj = solve_routing(g, cost, lam, phi0, 3.0, 25)
+    with dispatch.kernel_dispatch(1):
+        got_phi, got_traj = solve_routing(g, cost, lam, phi0, 3.0, 25)
+    np.testing.assert_allclose(np.asarray(got_traj), np.asarray(want_traj),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(got_phi), np.asarray(want_phi),
+                               rtol=1e-4, atol=1e-5)
+
+
+@pytest.mark.parametrize("W,N", [(3, 29), (2, 150)])
+def test_flow_op_matches_einsum_ref(W, N):
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    t = jnp.abs(jax.random.normal(ks[0], (W, N)))
+    phi = jnp.abs(jax.random.normal(ks[1], (W, N, N)))
+    inj = jnp.abs(jax.random.normal(ks[2], (W, N)))
+    got = flow_step_op(t, phi, inj, interpret=True)
+    want = ref.flow_step_ref(t, phi, inj)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("W,N,eta", [(3, 29, 3.0), (2, 150, 0.5)])
+def test_omd_op_matches_einsum_ref(W, N, eta):
+    ks = jax.random.split(jax.random.PRNGKey(2), 3)
+    mask = (jax.random.uniform(ks[0], (W, N, N)) > 0.4).astype(jnp.float32)
+    raw = jnp.abs(jax.random.normal(ks[1], (W, N, N))) * mask
+    s = raw.sum(-1, keepdims=True)
+    phi = jnp.where(s > 0, raw / jnp.where(s > 0, s, 1.0), 0.0)
+    delta = jnp.abs(jax.random.normal(ks[2], (W, N, N)))
+    got = omd_update_op(phi, delta, mask, eta, interpret=True)
+    want = ref.omd_update_ref(phi, delta, mask, eta)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_batched_solve_under_kernel_dispatch(er_ensemble):
+    """vmap composes with the Pallas interpret path end-to-end."""
+    graphs, banks = er_ensemble
+    batch = CECGraphBatch.from_graphs(graphs[:2])
+    stacked = stack_banks(banks[:2])
+    kw = dict(KW, outer_iters=5)
+    want = solve_jowr_batch(batch, stacked, LAM_TOTAL, **kw)
+    with dispatch.kernel_dispatch(1):
+        got = solve_jowr_batch(batch, stacked, LAM_TOTAL, **kw)
+    np.testing.assert_allclose(np.asarray(got.utility_traj),
+                               np.asarray(want.utility_traj),
+                               rtol=1e-4, atol=1e-4)

@@ -4,7 +4,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:
+    # only the property tests skip; the rest of the module still runs
+    from hypothesis_stub import given, settings, st
 
 from repro.core import (cost_and_state, get_cost, link_flows, marginals,
                         phi_gradient, propagate, total_cost)

@@ -2,7 +2,11 @@
 feasibility, topology generators."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:
+    # only the property tests skip; the rest of the module still runs
+    from hypothesis_stub import given, settings, st
 
 from repro.core import build_random_cec
 from repro.core.graph import InfeasibleTopology, build_augmented, random_deployment

@@ -21,11 +21,10 @@ from repro.core import (CECGraphBatch, build_random_cec, make_bank,
                         solve_jowr, solve_jowr_batch, stack_banks)
 from repro.topo import connected_er
 
+from . import common
 from .common import dump, emit, timeit
 
 LAM_TOTAL = 60.0
-OUTER = 30
-B_MAX = 32
 
 
 def measure_seq_vs_batched(B: int, outer_iters: int,
@@ -36,7 +35,8 @@ def measure_seq_vs_batched(B: int, outer_iters: int,
     kw = dict(method="single", eta_outer=0.05, eta_inner=3.0,
               outer_iters=outer_iters)
     if graphs is None:
-        graphs = [build_random_cec(connected_er(25, 0.2, seed=1 + s), 3,
+        n = common.scaled(25, 12)
+        graphs = [build_random_cec(connected_er(n, 0.2, seed=1 + s), 3,
                                    10.0, seed=s) for s in range(B)]
     if banks is None:
         banks = [make_bank("log", 3, seed=s, lam_total=LAM_TOTAL)
@@ -53,15 +53,18 @@ def measure_seq_vs_batched(B: int, outer_iters: int,
 
 
 def main() -> list[dict]:
-    graphs = [build_random_cec(connected_er(25, 0.2, seed=1 + s), 3, 10.0,
-                               seed=s) for s in range(B_MAX)]
+    outer = common.scaled(30, 3)
+    b_max = common.scaled(32, 2)
+    n = common.scaled(25, 12)
+    graphs = [build_random_cec(connected_er(n, 0.2, seed=1 + s), 3, 10.0,
+                               seed=s) for s in range(b_max)]
     banks = [make_bank("log", 3, seed=s, lam_total=LAM_TOTAL)
-             for s in range(B_MAX)]
+             for s in range(b_max)]
 
     rows = []
-    for B in (1, 8, 32):
-        t_seq, t_batched = measure_seq_vs_batched(B, OUTER, graphs, banks)
-        row = {"B": B, "outer_iters": OUTER,
+    for B in common.scaled((1, 8, 32), (1, 2)):
+        t_seq, t_batched = measure_seq_vs_batched(B, outer, graphs, banks)
+        row = {"B": B, "outer_iters": outer,
                "batched_s_per_instance": t_batched / B,
                "sequential_s_per_instance": t_seq / B,
                "speedup": t_seq / t_batched}

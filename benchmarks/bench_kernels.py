@@ -11,18 +11,42 @@ import numpy as np
 
 from repro.core import build_random_cec, get_cost, omd_step
 from repro.kernels import ref
+from repro.kernels.ops import flow_step_op, omd_update_op
 from repro.topo import connected_er
 
+from . import common
 from .common import dump, emit, timeit
 
 
+def _pallas_interpret_rows() -> list[dict]:
+    """Execute the Pallas control-plane kernels (interpret mode off-TPU)
+    against their einsum oracles — the CI smoke proof that the kernel
+    path itself still runs, not just the jnp path it replaces."""
+    W, N = 3, 64
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    t = jnp.abs(jax.random.normal(ks[0], (W, N)))
+    phi = jnp.abs(jax.random.normal(ks[1], (W, N, N)))
+    inj = jnp.abs(jax.random.normal(ks[2], (W, N)))
+    got = flow_step_op(t, phi, inj, interpret=True)
+    err_flow = float(jnp.abs(got - ref.flow_step_ref(t, phi, inj)).max())
+    mask = (phi > 0.5).astype(jnp.float32)
+    got2 = omd_update_op(phi * mask, phi, mask, 1.0, interpret=True)
+    err_omd = float(jnp.abs(
+        got2 - ref.omd_update_ref(phi * mask, phi, mask, 1.0)).max())
+    assert err_flow < 1e-4 and err_omd < 1e-4, (err_flow, err_omd)
+    emit("kernels.pallas_interpret", 0.0,
+         f"flow_err={err_flow:.2e};omd_err={err_omd:.2e}")
+    return [{"bench": "pallas_interpret", "n": N,
+             "flow_step_err": err_flow, "omd_update_err": err_omd}]
+
+
 def main() -> list[dict]:
-    rows = []
+    rows = _pallas_interpret_rows()
     cost = get_cost("exp")
     lam3 = jnp.array([20.0, 20.0, 20.0])
 
     # control-plane iteration vs fleet size (dense masked-tensor path)
-    for n in (25, 50, 100, 200, 400):
+    for n in common.scaled((25, 50, 100, 200, 400), (25, 50)):
         g = build_random_cec(connected_er(n, min(0.2, 8.0 / n), seed=1), 3,
                              10.0, seed=0)
         phi = g.uniform_phi()
@@ -39,15 +63,16 @@ def main() -> list[dict]:
              f"v5e_fused_est_us={v5e_est*1e6:.2f}")
 
     # flash-attention oracle FLOPs check (ref path, small shape)
-    q = jax.random.normal(jax.random.PRNGKey(0), (1, 8, 512, 64), jnp.float32)
-    k = jax.random.normal(jax.random.PRNGKey(1), (1, 8, 512, 64), jnp.float32)
-    v = jax.random.normal(jax.random.PRNGKey(2), (1, 8, 512, 64), jnp.float32)
+    S = common.scaled(512, 128)
+    q = jax.random.normal(jax.random.PRNGKey(0), (1, 8, S, 64), jnp.float32)
+    k = jax.random.normal(jax.random.PRNGKey(1), (1, 8, S, 64), jnp.float32)
+    v = jax.random.normal(jax.random.PRNGKey(2), (1, 8, S, 64), jnp.float32)
     att = jax.jit(lambda a, b, c: ref.mha_ref(a, b, c, causal=True))
     _, secs = timeit(att, q, k, v, warmup=1, iters=3)
-    flops = 4 * 8 * 512 * 512 * 64 / 2  # causal
-    rows.append({"bench": "mha_ref_512", "cpu_s": secs,
+    flops = 4 * 8 * S * S * 64 / 2  # causal
+    rows.append({"bench": f"mha_ref_{S}", "cpu_s": secs,
                  "gflops_cpu": flops / secs / 1e9})
-    emit("kernels.mha_ref_512", secs, f"gflops={flops/secs/1e9:.2f}")
+    emit(f"kernels.mha_ref_{S}", secs, f"gflops={flops/secs/1e9:.2f}")
     dump("bench_kernels", rows)
     return rows
 

@@ -1,4 +1,13 @@
-"""Shared benchmark utilities: timing, CSV emission, artifact dump."""
+"""Shared benchmark utilities: timing, CSV emission, artifact dump, smoke.
+
+Smoke mode (``python -m benchmarks.run --smoke``, used by the CI bench
+job) shrinks every module to import-and-execute scale: call
+:func:`scaled` for any size-like constant and it returns the tiny value
+instead, and :func:`timeit` clamps to 1 warmup / 1 iter.  Smoke numbers
+are *execution proofs*, not performance data — the JSON summary the CI
+job uploads is for trend eyeballing and import/runtime regression
+catching, never for perf claims.
+"""
 from __future__ import annotations
 
 import json
@@ -7,11 +16,26 @@ import time
 
 ART = pathlib.Path("experiments/paper")
 
+SMOKE = False
+
+
+def set_smoke(on: bool) -> None:
+    """Flip smoke mode (call before importing/running bench modules)."""
+    global SMOKE
+    SMOKE = bool(on)
+
+
+def scaled(normal, smoke):
+    """``normal`` at full scale, ``smoke`` under ``--smoke``."""
+    return smoke if SMOKE else normal
+
 
 def timeit(fn, *args, warmup: int = 1, iters: int = 3):
     """(result, seconds-per-call) with block_until_ready semantics."""
     import jax
 
+    if SMOKE:
+        warmup, iters = min(warmup, 1), 1
     for _ in range(warmup):
         jax.block_until_ready(fn(*args))
     t0 = time.perf_counter()

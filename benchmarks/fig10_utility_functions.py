@@ -7,35 +7,40 @@ from repro.core import (build_random_cec, exact_gradient_allocation, get_cost,
                         make_bank, solve_jowr)
 from repro.topo import connected_er
 
+from . import common
 from .common import dump, emit, timeit
 
 LAM_TOTAL = 60.0
 
 
 def main() -> list[dict]:
-    g = build_random_cec(connected_er(25, 0.2, seed=1), 3, 10.0, seed=0)
+    n = common.scaled(25, 12)
+    g = build_random_cec(connected_er(n, 0.2, seed=1), 3, 10.0, seed=0)
     cost = get_cost("exp")
     rows = []
     for kind in ("linear", "sqrt", "quadratic", "log"):
         bank = make_bank(kind, 3, seed=0, lam_total=LAM_TOTAL)
         # the paper observes linear utilities need ~400 outer iterations
         # while log needs ~30 (Fig. 10) — same behaviour here
-        iters = 400 if kind == "linear" else 80
+        iters = common.scaled(400 if kind == "linear" else 80, 6)
         res, secs = timeit(
             lambda b=bank, it=iters: solve_jowr(
                 g, b, LAM_TOTAL, method="nested", eta_outer=0.05,
-                eta_inner=3.0, outer_iters=it, inner_iters=40),
+                eta_inner=3.0, outer_iters=it,
+                inner_iters=common.scaled(40, 5)),
             warmup=0, iters=1)
         _, _, u_star = exact_gradient_allocation(
-            g, cost, bank, LAM_TOTAL, eta=0.1, outer_iters=150,
-            inner_iters=50, eta_inner=3.0)
+            g, cost, bank, LAM_TOTAL, eta=0.1,
+            outer_iters=common.scaled(150, 10),
+            inner_iters=common.scaled(50, 10), eta_inner=3.0)
         traj = np.asarray(res.utility_traj)
         row = {"kind": kind, "traj": traj.tolist(), "final": float(traj[-1]),
                "genie": u_star, "lam": np.asarray(res.lam).tolist()}
         rows.append(row)
         emit(f"fig10.{kind}", secs,
              f"U={traj[-1]:.3f};genie={u_star:.3f};gap={u_star-traj[-1]:.4f}")
-        assert traj[-1] > u_star - max(0.05 * abs(u_star), 0.5), kind
+        if not common.SMOKE:             # near-genie needs the full run
+            assert traj[-1] > u_star - max(0.05 * abs(u_star), 0.5), kind
     dump("fig10_utility_functions", rows)
     return rows
 

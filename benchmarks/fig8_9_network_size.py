@@ -16,29 +16,32 @@ from repro.core import (CECGraphBatch, build_random_cec, frank_wolfe_routing,
                         get_cost, solve_routing_batch)
 from repro.topo import connected_er
 
+from . import common
 from .common import dump, emit, timeit
 
 LAM = jnp.array([20.0, 20.0, 20.0])
-ITERS = 50
-B = 4
 
 
 def main() -> list[dict]:
     cost = get_cost("exp")
+    B = common.scaled(4, 2)
+    iters = common.scaled(50, 8)
+    fw_iters = common.scaled(150, 25)
     rows = []
-    for n in (20, 25, 30, 35, 40):
+    for n in common.scaled((20, 25, 30, 35, 40), (12, 15)):
         graphs = [build_random_cec(connected_er(n, 0.2, seed=1 + s), 3, 10.0,
                                    seed=s) for s in range(B)]
         batch = CECGraphBatch.from_graphs(graphs)
         phi0 = batch.uniform_phi()
         omd = jax.jit(lambda p, b=batch: solve_routing_batch(
-            b, cost, LAM, p, 3.0, ITERS))
+            b, cost, LAM, p, 3.0, iters))
         sgp = jax.jit(lambda p, b=batch: solve_routing_batch(
-            b, cost, LAM, p, 0.5, ITERS, method="sgp"))
+            b, cost, LAM, p, 0.5, iters, method="sgp"))
         (_, tr_o), t_o = timeit(omd, phi0)
         (_, tr_s), t_s = timeit(sgp, phi0)
         t0 = time.perf_counter()
-        d_opt = np.array([frank_wolfe_routing(g, cost, LAM, n_iters=150)[1]
+        d_opt = np.array([frank_wolfe_routing(g, cost, LAM,
+                                              n_iters=fw_iters)[1]
                           for g in graphs])
         t_opt = (time.perf_counter() - t0) / B
         tr_o, tr_s = np.asarray(tr_o), np.asarray(tr_s)

@@ -23,6 +23,7 @@ import pathlib
 import subprocess
 import sys
 
+from . import common
 from .common import dump, emit
 
 CELLS = [
@@ -56,11 +57,11 @@ HYPOTHESES = {
 }
 
 
-def control_plane_rows(B: int = 8) -> list[dict]:
+def control_plane_rows(B: int = 8, outer_iters: int = 20) -> list[dict]:
     """Batched control-plane cell: sequential vs vmapped JOWR ensemble."""
     from .bench_batched import measure_seq_vs_batched
 
-    t_seq, t_bat = measure_seq_vs_batched(B, outer_iters=20)
+    t_seq, t_bat = measure_seq_vs_batched(B, outer_iters=outer_iters)
 
     verdict = "confirmed" if t_bat < t_seq * 0.95 else (
         "neutral" if t_bat < t_seq * 1.05 else "refuted")
@@ -98,6 +99,12 @@ def run_variant(arch: str, shape: str, variant: str,
 def main() -> list[dict]:
     from repro.configs import SHAPES, get_config
     from repro.roofline.analysis import analytic_bytes, roofline_terms
+
+    if common.SMOKE:
+        # the roofline cells re-lower multi-hundred-B models in
+        # subprocesses — far past the smoke budget; the batched
+        # control-plane cell alone exercises this module's solve paths
+        return control_plane_rows(B=2, outer_iters=3)
 
     rows = control_plane_rows()
     for arch, shape, variants in CELLS:

@@ -1,38 +1,72 @@
 """Benchmark harness: one module per paper table/figure.
 
-``PYTHONPATH=src python -m benchmarks.run [--only fig7,...]``
+``PYTHONPATH=src python -m benchmarks.run [--only fig7,...] [--smoke]``
 prints ``name,us_per_call,derived`` CSV rows and writes JSON artifacts to
 experiments/paper/ (consumed by EXPERIMENTS.md).
+
+``--smoke`` is the CI gate (tiny sizes, 1 warmup / 1 iter — see
+``common.set_smoke``): it exercises every module's kernel and batch paths
+end-to-end, writes a ``BENCH_smoke.json`` summary at the repo root (the
+uploaded CI artifact), and exits non-zero on any import or runtime error.
 """
 from __future__ import annotations
 
 import argparse
+import json
+import pathlib
+import platform
 import sys
+import time
 import traceback
+
+from . import common
 
 MODULES = ("fig7_routing_convergence", "fig8_9_network_size",
            "fig10_utility_functions", "fig11_single_loop",
            "table2_topologies", "bench_kernels", "bench_batched",
-           "perf_iterations")
+           "bench_scenarios", "perf_iterations")
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny sizes, 1 warmup/1 iter; write BENCH_smoke.json")
     args = ap.parse_args()
     only = {s.strip() for s in args.only.split(",") if s.strip()}
+    common.set_smoke(args.smoke)
 
     print("name,us_per_call,derived")
-    failed = []
+    failed, summary = [], {}
     for mod in MODULES:
         if only and not any(mod.startswith(o) for o in only):
             continue
+        t0 = time.perf_counter()
         try:
             m = __import__(f"benchmarks.{mod}", fromlist=["main"])
-            m.main()
+            rows = m.main()
+            summary[mod] = {"status": "ok",
+                            "seconds": round(time.perf_counter() - t0, 3),
+                            "rows": rows if isinstance(rows, (list, dict))
+                            else None}
         except Exception as e:  # noqa: BLE001
             failed.append((mod, repr(e)))
+            summary[mod] = {"status": "error", "error": repr(e),
+                            "seconds": round(time.perf_counter() - t0, 3)}
             traceback.print_exc()
+
+    if args.smoke:
+        import jax
+
+        out = {"smoke": True, "python": platform.python_version(),
+               "jax": jax.__version__, "backend": jax.default_backend(),
+               "modules": summary,
+               "failed": [m for m, _ in failed]}
+        pathlib.Path("BENCH_smoke.json").write_text(
+            json.dumps(out, indent=1, default=str))
+        print(f"wrote BENCH_smoke.json ({len(summary)} modules, "
+              f"{len(failed)} failed)", file=sys.stderr)
+
     if failed:
         print("FAILED:", failed, file=sys.stderr)
         raise SystemExit(1)

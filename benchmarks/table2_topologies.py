@@ -15,25 +15,30 @@ from repro.core import (CECGraphBatch, build_random_cec, frank_wolfe_routing,
                         get_cost, solve_routing_batch)
 from repro.topo import make_topology
 
+from . import common
 from .common import dump, emit, timeit
 
 LAM = jnp.array([15.0, 15.0, 15.0])
-B = 4
 
 
 def main() -> list[dict]:
     cost = get_cost("exp")
+    B = common.scaled(4, 2)
+    iters = common.scaled(150, 10)
+    fw_iters = common.scaled(200, 25)
     rows = []
-    for name in ("abilene", "balanced_tree", "fog", "geant"):
+    for name in common.scaled(("abilene", "balanced_tree", "fog", "geant"),
+                              ("abilene", "fog")):
         adj, cbar = make_topology(name)
         graphs = [build_random_cec(adj, 3, cbar, seed=s) for s in range(B)]
         batch = CECGraphBatch.from_graphs(graphs)
         phi0 = batch.uniform_phi()
         omd = jax.jit(lambda p, b=batch: solve_routing_batch(
-            b, cost, LAM, p, 3.0, 150))
+            b, cost, LAM, p, 3.0, iters))
         (_, traj), secs = timeit(omd, phi0)
-        traj = np.asarray(traj)                           # [B, 150]
-        d_opt = np.array([frank_wolfe_routing(g, cost, LAM, n_iters=200)[1]
+        traj = np.asarray(traj)                           # [B, iters]
+        d_opt = np.array([frank_wolfe_routing(g, cost, LAM,
+                                              n_iters=fw_iters)[1]
                           for g in graphs])
         # per-instance iterations to within 1% of OPT; -1 = never reached,
         # excluded from the ensemble mean so the statistic stays honest
@@ -53,7 +58,8 @@ def main() -> list[dict]:
         emit(f"table2.{name}", secs / B,
              f"B={B};cost={row['omd_final']:.3f};opt={row['opt']:.3f};"
              f"it_1pct={row['iters_to_1pct']:.1f}")
-        assert (traj[:, -1] <= d_opt * 1.02).all(), name
+        if not common.SMOKE:             # convergence needs the full run
+            assert (traj[:, -1] <= d_opt * 1.02).all(), name
     dump("table2_topologies", rows)
     return rows
 

@@ -5,24 +5,35 @@ from .batch import (CECGraphBatch, pad_graph, solve_jowr_batch,
                     solve_routing_batch, stack_banks)
 from .costs import CostFn, get as get_cost
 from .flow import cost_and_state, link_flows, propagate, total_cost
-from .graph import CECGraph, InfeasibleTopology, build_augmented, build_random_cec
+from .graph import (CECGraph, InfeasibleTopology, InstanceDraw,
+                    build_augmented, build_random_cec, draw_instance)
 from .jowr import solve_jowr
 from .marginal import marginals, phi_gradient
 from .opt_baseline import exact_gradient_allocation, frank_wolfe_routing
 from .routing import (RoutingState, kkt_residual, omd_step,
                       project_simplex_masked, sgp_step, solve_routing,
-                      solve_routing_sgp)
+                      solve_routing_sgp, warm_start_phi)
+from .scenario import (BankSwap, CapacityScale, DemandShift, Event, NodeFail,
+                       NodeJoin, Rewire, Scenario, ScenarioResult,
+                       ScenarioState, apply_event, compile_segments,
+                       initial_state, named_scenarios, run_scenario,
+                       scenario_metrics, segment_optima)
 from .single_loop import omad
 from .utility import UtilityBank, make_bank
 
 __all__ = [
     "JOWRResult", "allocation_kkt_residual", "gs_oma", "CostFn", "get_cost",
     "cost_and_state", "link_flows", "propagate", "total_cost", "CECGraph",
-    "InfeasibleTopology", "build_augmented", "build_random_cec", "solve_jowr",
+    "InfeasibleTopology", "InstanceDraw", "build_augmented",
+    "build_random_cec", "draw_instance", "solve_jowr",
     "marginals", "phi_gradient", "exact_gradient_allocation",
     "frank_wolfe_routing", "RoutingState", "kkt_residual", "omd_step",
     "project_simplex_masked", "sgp_step", "solve_routing",
-    "solve_routing_sgp", "omad", "UtilityBank", "make_bank",
+    "solve_routing_sgp", "warm_start_phi", "omad", "UtilityBank", "make_bank",
     "CECGraphBatch", "pad_graph", "solve_jowr_batch", "solve_routing_batch",
     "stack_banks", "dispatch",
+    "Event", "Rewire", "NodeFail", "NodeJoin", "CapacityScale", "BankSwap",
+    "DemandShift", "Scenario", "ScenarioState", "ScenarioResult",
+    "apply_event", "initial_state", "compile_segments", "run_scenario",
+    "scenario_metrics", "segment_optima", "named_scenarios",
 ]

@@ -47,9 +47,13 @@ def _observe(graph: CECGraph, cost: CostFn, bank: UtilityBank, lam: Array,
 
 
 def _project_box_simplex(lam: Array, lam_total: float, delta: float) -> Array:
-    """P_[δ,λ−δ] (Alg. 1 line 9) then restore Σλ_w = λ (DESIGN.md §8.3)."""
+    """P_[δ,λ−δ] (Alg. 1 line 9) then restore Σλ_w = λ (DESIGN.md §8.3).
+
+    Last-axis semantics so stacked ``[B, W]`` iterates (the scenario
+    engine's per-instance rows) project exactly like a single ``[W]``.
+    """
     lam = jnp.clip(lam, delta, lam_total - delta)
-    lam = lam * (lam_total / lam.sum())
+    lam = lam * (lam_total / lam.sum(-1, keepdims=True))
     return jnp.clip(lam, delta, lam_total - delta)
 
 

@@ -22,7 +22,7 @@ propagation fixed point is reached in ≤ ``depth_max`` relaxation steps
 from __future__ import annotations
 
 import dataclasses
-from typing import Sequence
+from typing import NamedTuple
 
 import jax
 import numpy as np
@@ -94,6 +94,7 @@ def build_augmented(
     link_capacity: np.ndarray,
     compute_capacity: np.ndarray,
     src_capacity: float = 1e4,
+    alive: np.ndarray | None = None,
 ) -> CECGraph:
     """Build the augmented DAG from a physical topology.
 
@@ -103,14 +104,26 @@ def build_augmented(
       link_capacity: [N, N] symmetric positive capacities C_ij.
       compute_capacity: [N] node compute capacities C_i.
       src_capacity: capacity of the virtual admission links (S, i).
+      alive: optional [N] bool node-liveness mask (scenario engine,
+        DESIGN.md §10).  Dead nodes stay in the index space but get no
+        edges and no deployment — exactly the isolated-pad-node convention
+        of ``core/batch.pad_graph`` — so iterates warm-start across
+        fail/join events without any index remapping.  With an explicit
+        ``alive`` the physical graph may be disconnected: unreachable
+        nodes are ordered after all reachable ones and usefulness pruning
+        inerts them; only session-level reachability from S is enforced.
     """
     adj = np.asarray(adj_undirected, bool)
     deploy = np.asarray(deploy, bool)
     W, N = deploy.shape
     if not (deploy.sum(0) == 1).all():
         raise ValueError("each node must deploy exactly one model version")
+    relaxed = alive is not None
+    alive = np.ones(N, bool) if alive is None else np.asarray(alive, bool)
+    adj = adj & alive[:, None] & alive[None, :]
+    deploy = deploy & alive[None, :]
     if (deploy.sum(1) == 0).any():
-        raise InfeasibleTopology("some model version has no deployment")
+        raise InfeasibleTopology("some model version has no (alive) deployment")
 
     src = N
     sinks = np.arange(W) + N + 1
@@ -119,10 +132,13 @@ def build_augmented(
     # BFS layering from the admission points D(1); S sits at depth -1.
     d1 = deploy[0]
     depth = _bfs_depth(adj, d1)
-    if np.isinf(depth).any():
+    unreachable = np.isinf(depth)
+    if unreachable.any() and not relaxed:
         raise InfeasibleTopology("physical graph is not connected")
     # Total order key → DAG orientation (strict, ties broken by index).
-    key = depth * N + np.arange(N)
+    # Unreachable/dead nodes sort after every reachable node (max reachable
+    # key is < N², edgeless anyway for dead ones).
+    key = np.where(unreachable, float(N * N), depth * N) + np.arange(N)
     dag = adj & (key[:, None] < key[None, :])
 
     # usefulness: can node i still deliver session-w traffic to D_w?
@@ -191,14 +207,25 @@ def random_deployment(n: int, n_versions: int, rng: np.random.Generator) -> np.n
     return deploy
 
 
-def build_random_cec(
+class InstanceDraw(NamedTuple):
+    """A feasible random instance: the built graph plus the raw numpy state
+    (``deploy``, ``link_capacity``, ``compute_capacity``) the scenario
+    engine mutates between segments (DESIGN.md §10)."""
+
+    graph: CECGraph
+    deploy: np.ndarray
+    link_capacity: np.ndarray
+    compute_capacity: np.ndarray
+
+
+def draw_instance(
     adj: np.ndarray,
     n_versions: int,
     mean_link_capacity: float,
     seed: int,
     mean_compute_capacity: float | None = None,
     max_tries: int = 50,
-) -> CECGraph:
+) -> InstanceDraw:
     """Randomized capacities + deployment (paper §IV experiment setup).
 
     Link capacities C_ij ~ U[0, 2·C̄] (floored at 0.05·C̄ for numerical
@@ -213,7 +240,21 @@ def build_random_cec(
         comp = rng.uniform(0.5, 1.5, size=n) * mean_cc
         deploy = random_deployment(n, n_versions, rng)
         try:
-            return build_augmented(adj, deploy, cap, comp)
+            graph = build_augmented(adj, deploy, cap, comp)
         except InfeasibleTopology:
             continue
+        return InstanceDraw(graph, deploy, cap, comp)
     raise InfeasibleTopology(f"no feasible instance after {max_tries} tries")
+
+
+def build_random_cec(
+    adj: np.ndarray,
+    n_versions: int,
+    mean_link_capacity: float,
+    seed: int,
+    mean_compute_capacity: float | None = None,
+    max_tries: int = 50,
+) -> CECGraph:
+    """``draw_instance`` returning only the built graph (the common case)."""
+    return draw_instance(adj, n_versions, mean_link_capacity, seed,
+                         mean_compute_capacity, max_tries).graph

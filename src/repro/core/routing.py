@@ -66,6 +66,28 @@ def omd_step(graph: CECGraph, cost: CostFn, phi: Array, lam: Array,
     return RoutingState(new_phi, D)
 
 
+def warm_start_phi(phi: Array, out_mask: Array, explore: float = 0.1) -> Array:
+    """Re-target routing iterates onto a (possibly changed) edge mask.
+
+    The OMD update is multiplicative, so an edge whose φ has decayed to ~0
+    can never revive on its own — after node/link churn the new graph's
+    edges must be seeded with exploration mass (DESIGN.md §5, §10):
+
+        φ' ∝ (1−ε)·φ·mask + ε·uniform(mask)
+
+    renormalized per row; rows left with no mass (e.g. a node whose old
+    out-edges all vanished) restart uniform.  Accepts stacked ``[B, ...]``
+    iterates — everything is elementwise + row reductions.  ``explore=0``
+    degenerates to mask-and-renormalize (still required after churn to
+    drop deleted edges).
+    """
+    rowsum = out_mask.sum(-1, keepdims=True)
+    uniform = out_mask / jnp.where(rowsum > 0, rowsum, 1.0)
+    mixed = (1.0 - explore) * phi * out_mask + explore * uniform
+    s = mixed.sum(-1, keepdims=True)
+    return jnp.where(s > 0, mixed / jnp.where(s > 0, s, 1.0), uniform)
+
+
 def solve_routing(graph: CECGraph, cost: CostFn, lam: Array, phi0: Array,
                   eta: float, n_iters: int) -> tuple[Array, Array]:
     """Run OMD-RT for ``n_iters`` (the oracle 𝔒 of Assumption 4).

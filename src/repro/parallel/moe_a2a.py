@@ -29,6 +29,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from .collectives import _SM_KW, _shard_map
+
 
 def moe_a2a_apply(mesh, params, x, *, capacity_factor: float = 1.5):
     """x [B, S, D] (batch over 'data'); params: router [D,E],
@@ -76,11 +78,11 @@ def moe_a2a_apply(mesh, params, x, *, capacity_factor: float = 1.5):
         yt = yt * gval[:, None].astype(x_loc.dtype)
         return yt.reshape(b, S, D)
 
-    fn = jax.shard_map(
+    fn = _shard_map(
         body, mesh=mesh,
         in_specs=(P("data", None, None), P(None, None),
                   P("model", None, None), P("model", None, None)),
-        out_specs=P("data", None, None), check_vma=False)
+        out_specs=P("data", None, None), **_SM_KW)
     return fn(x, params["router"], params["wi"], params["wo"])
 
 

@@ -14,7 +14,11 @@ hosting one model version.  Every control interval it:
     version w's traffic each deploying device processes).
 
 Node churn (device joins/leaves) rebuilds the graph and *warm-starts* φ
-with an exploration mix — the Fig. 11 online-adaptation behaviour.
+with an exploration mix (``core.routing.warm_start_phi``) — the Fig. 11
+online-adaptation behaviour.  The router also consumes the scenario
+engine's event stream directly (``apply_scenario_event``, DESIGN.md §10):
+the same declarative events that drive offline scenario sweeps drive the
+live control plane, so what is benchmarked is what serves.
 
 The router's observe path runs through ``core.flow`` / ``core.routing``
 and therefore inherits the size-based kernel dispatch (core/dispatch.py)
@@ -32,7 +36,9 @@ import numpy as np
 
 from repro.core import CECGraph, get_cost, propagate, total_cost
 from repro.core.allocation import _observe, _project_box_simplex
-from repro.core.routing import solve_routing
+from repro.core.routing import solve_routing, warm_start_phi
+from repro.core.scenario import (DemandShift, Event, ScenarioState,
+                                 apply_event)
 
 
 @dataclasses.dataclass
@@ -101,14 +107,35 @@ class CECRouter:
         """Re-target the running iterates onto a new graph (node fail/join).
 
         φ restarts from an exploration mix so edges that multiplicative
-        updates had zeroed can be rediscovered (DESIGN.md §5)."""
+        updates had zeroed can be rediscovered (DESIGN.md §5, §10)."""
         self.graph = new_graph
-        uniform = new_graph.uniform_phi()
-        if self.phi.shape == uniform.shape:
-            mask = new_graph.out_mask
-            mixed = (1 - explore) * self.phi * mask + explore * uniform
-            rowsum = mixed.sum(-1, keepdims=True)
-            self.phi = jnp.where(rowsum > 0, mixed / jnp.where(
-                rowsum > 0, rowsum, 1.0), uniform)
+        if self.phi.shape == new_graph.out_mask.shape:
+            self.phi = warm_start_phi(self.phi, new_graph.out_mask, explore)
         else:
-            self.phi = uniform
+            self.phi = new_graph.uniform_phi()
+
+    def on_demand_change(self, lam_total: float):
+        """Re-scale the admission split onto a new total demand λ."""
+        self.lam = self.lam * (lam_total / self.lam_total)
+        self.lam_total = float(lam_total)
+        self.lam = _project_box_simplex(self.lam, self.lam_total, self.delta)
+
+    def apply_scenario_event(self, state: ScenarioState,
+                             event: Event, explore: float = 0.1
+                             ) -> ScenarioState:
+        """Consume one scenario-engine event against the live iterates.
+
+        ``state`` is the fleet's physical description (the same
+        ``core.scenario.ScenarioState`` the offline sweeps evolve); the
+        event is applied there, the augmented graph rebuilt, and the
+        running (Λ, φ) warm-started exactly as ``run_scenario`` does.
+        Returns the post-event state — thread it into the next call.
+        Bank swaps change only the *measured* utility (the environment),
+        so the router's iterates carry over untouched."""
+        new_state = apply_event(state, event)
+        if isinstance(event, DemandShift):
+            self.on_demand_change(new_state.lam_total)
+        elif event.changes_graph:
+            self.on_topology_change(new_state.graph(), explore=explore)
+        self.history.append({"event": event.kind, "at": len(self.history)})
+        return new_state

@@ -1,5 +1,7 @@
+from .churn import ChurnError, add_links, drop_links, rewire_links
 from .topologies import (abilene, balanced_tree, connected_er, fog, geant,
                          make_topology)
 
 __all__ = ["abilene", "balanced_tree", "connected_er", "fog", "geant",
-           "make_topology"]
+           "make_topology", "ChurnError", "add_links", "drop_links",
+           "rewire_links"]

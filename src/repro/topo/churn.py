@@ -1,0 +1,83 @@
+"""Physical-topology perturbations for the non-stationary scenario engine.
+
+These operate purely on symmetric boolean adjacency matrices — the
+node-index space never changes, which is what lets the scenario engine
+(``core/scenario.py``, DESIGN.md §10) warm-start routing iterates across
+churn events without remapping.  Deployment/capacity bookkeeping lives in
+the scenario state, not here.
+
+All helpers are deterministic in ``seed`` and, unless told otherwise,
+retry draws until the surviving graph is connected (so the augmented
+build never rejects a generated segment).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from .topologies import _connected
+
+
+class ChurnError(RuntimeError):
+    """Raised when no connected perturbation is found within ``max_tries``."""
+
+
+def _undirected_pairs(mask: np.ndarray) -> np.ndarray:
+    """[K, 2] upper-triangular index pairs where ``mask`` holds."""
+    iu, ju = np.nonzero(np.triu(mask, 1))
+    return np.stack([iu, ju], axis=1)
+
+
+def _apply_pairs(adj: np.ndarray, pairs: np.ndarray, value: bool) -> np.ndarray:
+    out = adj.copy()
+    for i, j in pairs:
+        out[i, j] = out[j, i] = value
+    return out
+
+
+def drop_links(adj: np.ndarray, frac: float, seed: int,
+               keep_connected: bool = True, max_tries: int = 100) -> np.ndarray:
+    """Remove a ``frac`` share of links uniformly at random."""
+    pairs = _undirected_pairs(adj)
+    k = int(round(frac * len(pairs)))
+    if k == 0:
+        return adj.copy()
+    for t in range(max_tries):
+        rng = np.random.default_rng(seed + 7919 * t)
+        sel = pairs[rng.choice(len(pairs), size=k, replace=False)]
+        out = _apply_pairs(adj, sel, False)
+        if not keep_connected or _connected(out):
+            return out
+    raise ChurnError(f"no connected graph after dropping {k} links")
+
+
+def add_links(adj: np.ndarray, count: int, seed: int) -> np.ndarray:
+    """Add ``count`` uniformly-random links between non-adjacent pairs."""
+    absent = _undirected_pairs(~adj & ~np.eye(adj.shape[0], dtype=bool))
+    if len(absent) == 0 or count == 0:
+        return adj.copy()
+    rng = np.random.default_rng(seed)
+    k = min(count, len(absent))
+    sel = absent[rng.choice(len(absent), size=k, replace=False)]
+    return _apply_pairs(adj, sel, True)
+
+
+def rewire_links(adj: np.ndarray, frac: float, seed: int,
+                 keep_connected: bool = True,
+                 max_tries: int = 100) -> np.ndarray:
+    """Move a ``frac`` share of links to random new endpoints.
+
+    Link-count preserving (device mobility: the same radios, different
+    neighbours): drop ⌈frac·E⌉ links, add the same number elsewhere.
+    """
+    pairs = _undirected_pairs(adj)
+    k = int(round(frac * len(pairs)))
+    if k == 0:
+        return adj.copy()
+    for t in range(max_tries):
+        rng = np.random.default_rng(seed + 104729 * t)
+        sel = pairs[rng.choice(len(pairs), size=k, replace=False)]
+        out = _apply_pairs(adj, sel, False)
+        out = add_links(out, k, int(rng.integers(2**31)))
+        if not keep_connected or _connected(out):
+            return out
+    raise ChurnError(f"no connected rewiring of {k} links found")

@@ -1,0 +1,179 @@
+"""Non-stationary scenario engine (DESIGN.md §10).
+
+(a) Static parity: an event-free scenario IS the static engine — its
+    trajectory must reproduce per-seed ``solve_jowr`` to machine
+    precision (the batched segment solve is exactly PR-1's
+    ``solve_jowr_batch``; observed bitwise-equal on CPU).
+(b) Churn recovery: after a link-rewire event the warm-started solver
+    must recover ≥95% of pre-event utility within the post-event budget.
+(c) Event semantics: liveness masks keep the node-index space stable,
+    demand/bank/capacity events transform the state as declared, and
+    ``warm_start_phi`` re-seeds exploration mass everywhere it must.
+"""
+import numpy as np
+import pytest
+
+from repro.core import (BankSwap, CapacityScale, DemandShift, NodeFail,
+                        NodeJoin, Rewire, Scenario, apply_event,
+                        build_random_cec, compile_segments, initial_state,
+                        make_bank, named_scenarios, run_scenario,
+                        scenario_metrics, solve_jowr, warm_start_phi)
+from repro.topo import connected_er
+
+KW = dict(topology="connected_er", topo_kwargs={"n": 15, "p": 0.3},
+          n_sessions=3, mean_capacity=10.0, bank_kind="log", lam_total=60.0)
+RECOVERY_FRAC = 0.95
+POST_EVENT_BUDGET = 30        # iterations allowed to re-cross the bar
+
+
+# ---------------------------------------------------------------------------
+# (a) static parity
+# ---------------------------------------------------------------------------
+
+def test_event_free_scenario_matches_solve_jowr():
+    sc = Scenario("steady", horizon=25, **KW)
+    seeds = (0, 1)
+    res = run_scenario(sc, seeds=seeds, eta_outer=0.05, eta_inner=3.0)
+    assert res.utility_traj.shape == (2, 25)
+    assert len(res.segments) == 1 and res.segments[0].events == ()
+    for b, s in enumerate(seeds):
+        g = build_random_cec(connected_er(15, 0.3, seed=1 + s), 3, 10.0,
+                             seed=s)
+        bank = make_bank("log", 3, seed=s, lam_total=60.0)
+        want = solve_jowr(g, bank, 60.0, method="single", eta_outer=0.05,
+                          eta_inner=3.0, outer_iters=25)
+        np.testing.assert_allclose(np.asarray(res.utility_traj[b]),
+                                   np.asarray(want.utility_traj),
+                                   rtol=1e-6, atol=1e-5)
+        np.testing.assert_allclose(np.asarray(res.lam[b]),
+                                   np.asarray(want.lam),
+                                   rtol=1e-6, atol=1e-6)
+        np.testing.assert_allclose(np.asarray(res.phi[b]),
+                                   np.asarray(want.phi),
+                                   rtol=1e-6, atol=1e-6)
+
+
+def test_run_scenario_is_deterministic():
+    sc = named_scenarios(horizon=16, n=12, p=0.35)["link_churn"]
+    a = run_scenario(sc, seeds=(0,))
+    b = run_scenario(sc, seeds=(0,))
+    assert np.array_equal(np.asarray(a.utility_traj),
+                          np.asarray(b.utility_traj))
+
+
+# ---------------------------------------------------------------------------
+# (b) churn recovery — the paper's online-adaptation claim, asserted
+# ---------------------------------------------------------------------------
+
+def test_link_churn_recovers_pre_event_utility():
+    sc = named_scenarios(horizon=60, n=15, p=0.3)["link_churn"]
+    res = run_scenario(sc, seeds=(0, 1, 2))
+    m = scenario_metrics(res, recovery_frac=RECOVERY_FRAC)
+    (ev,) = m["events"]
+    assert ev.kinds == ("Rewire",)
+    # every seed re-crosses 95% of its pre-event utility ...
+    assert ev.recovered_frac == 1.0
+    # ... within the post-event budget ...
+    assert ev.recovery_iters <= POST_EVENT_BUDGET
+    # ... and holds it at segment end (ensemble mean)
+    assert ev.u_final >= RECOVERY_FRAC * ev.u_pre
+    assert m["dynamic_regret"] >= 0.0          # self-comparator property
+
+
+# ---------------------------------------------------------------------------
+# (c) event + warm-start semantics
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def state0():
+    return initial_state(Scenario("s", horizon=10, **KW), seed=0)
+
+
+def test_node_fail_join_round_trip(state0):
+    failed = apply_event(state0, NodeFail(at=1, count=3, seed=2))
+    assert failed.alive.sum() == state0.alive.sum() - 3
+    g = failed.graph()                       # feasible by construction
+    dead = np.nonzero(~failed.alive)[0]
+    out = np.asarray(g.out_mask)
+    assert (out[:, dead, :] == 0).all() and (out[:, :, dead] == 0).all()
+    # fail → join(all) restores the exact original augmented graph:
+    # the index space never moved, deployment rows were only masked
+    joined = apply_event(failed, NodeJoin(at=2))
+    assert (joined.alive == state0.alive).all()
+    np.testing.assert_array_equal(np.asarray(joined.graph().out_mask),
+                                  np.asarray(state0.graph().out_mask))
+
+
+def test_node_fail_never_strands_a_version(state0):
+    for ev_seed in range(5):
+        st = apply_event(state0, NodeFail(at=1, count=4, seed=ev_seed))
+        assert (st.deploy[:, st.alive].sum(1) > 0).all()
+        st.graph()                           # must not raise
+
+
+def test_capacity_demand_bank_events(state0):
+    st = apply_event(state0, CapacityScale(at=1, link=0.5, compute=2.0))
+    np.testing.assert_allclose(st.link_capacity,
+                               0.5 * state0.link_capacity)
+    np.testing.assert_allclose(st.compute_capacity,
+                               2.0 * state0.compute_capacity)
+    st = apply_event(st, DemandShift(at=2, lam_total=75.0))
+    assert st.lam_total == 75.0
+    st = apply_event(st, BankSwap(at=3, bank_kind="sqrt", seed=1))
+    assert st.bank.kind == "sqrt"
+    assert state0.bank.kind == "log"         # originals are never mutated
+
+
+def test_rewire_preserves_link_count_and_connectivity(state0):
+    st = apply_event(state0, Rewire(at=1, frac=0.4, seed=7))
+    assert st.adj.sum() == state0.adj.sum()
+    assert (st.adj != state0.adj).any()
+    st.graph()                               # connected → builds fine
+
+
+def test_events_outside_horizon_rejected():
+    with pytest.raises(ValueError):
+        Scenario("bad", horizon=10, events=(Rewire(at=0),), **KW)
+    with pytest.raises(ValueError):
+        Scenario("bad", horizon=10, events=(Rewire(at=10),), **KW)
+
+
+def test_compile_segments_share_static_metadata():
+    sc = named_scenarios(horizon=20, n=12, p=0.35)["node_failure"]
+    segs = compile_segments(sc, seeds=(0, 1))
+    assert [s.start for s in segs] == [0, 8, 16]
+    assert sum(s.n_iters for s in segs) == 20
+    meta = {(s.batch.n_bar, s.batch.depth_max, s.batch.src) for s in segs}
+    assert len(meta) == 1                    # one shared XLA program shape
+
+
+def test_warm_start_phi_seeds_exploration_mass(state0):
+    g1 = state0.graph()
+    st2 = apply_event(state0, Rewire(at=1, frac=0.5, seed=3))
+    g2 = st2.graph()
+    phi = warm_start_phi(g1.uniform_phi(), g2.out_mask, explore=0.1)
+    phi = np.asarray(phi)
+    mask = np.asarray(g2.out_mask)
+    assert (phi[mask == 0] == 0).all()
+    rows = phi.sum(-1)
+    np.testing.assert_allclose(rows[mask.sum(-1) > 0], 1.0, atol=1e-5)
+    # every allowed edge — including freshly created ones the old φ never
+    # saw — carries strictly positive probability
+    assert (phi[mask > 0] > 0).all()
+
+
+def test_named_catalog_constructs():
+    scs = named_scenarios(horizon=40)
+    assert {"steady", "link_churn", "node_failure", "capacity_drift",
+            "demand_surge", "utility_swap", "flash_crowd"} <= set(scs)
+    for sc in scs.values():
+        assert list(sc.events) == sorted(sc.events, key=lambda e: e.at)
+
+
+def test_demand_shift_rescales_allocation():
+    sc = Scenario("surge", horizon=12,
+                  events=(DemandShift(at=6, lam_total=75.0),), **KW)
+    res = run_scenario(sc, seeds=(0,))
+    lam_t = np.asarray(res.lam_traj)[0]      # [T, W]
+    np.testing.assert_allclose(lam_t[:6].sum(-1), 60.0, rtol=1e-4)
+    np.testing.assert_allclose(lam_t[6:].sum(-1), 75.0, rtol=1e-4)

@@ -94,3 +94,43 @@ def test_router_topology_change_keeps_feasibility():
     assert (phi[mask == 0] == 0).all()
     rows = phi.sum(-1)
     np.testing.assert_allclose(rows[mask.sum(-1) > 0], 1.0, atol=1e-5)
+    # churn warm-start: every allowed edge keeps exploration mass — the
+    # multiplicative update can only revive what this mix seeds
+    assert (phi[mask > 0] > 0).all()
+
+
+def test_router_consumes_scenario_event_stream():
+    """The serving control plane consumes the same declarative events the
+    scenario engine sweeps offline (DESIGN.md §10)."""
+    from repro.core import DemandShift, NodeFail, Scenario, initial_state
+
+    sc = Scenario("fleet", horizon=10, topo_kwargs={"n": 12, "p": 0.35},
+                  mean_capacity=20.0, lam_total=12.0)
+    state = initial_state(sc, seed=0)
+    router = CECRouter(state.graph(), lam_total=12.0)
+    router.control_step(lambda lam: float(np.sum(lam)))
+
+    state = router.apply_scenario_event(state, NodeFail(at=1, count=2,
+                                                        seed=4))
+    assert state.alive.sum() == 10
+    mask = np.asarray(router.graph.out_mask)
+    phi = np.asarray(router.phi)
+    dead = np.nonzero(~state.alive)[0]
+    assert (mask[:, dead, :] == 0).all()          # failed nodes have no edges
+    assert (phi[mask == 0] == 0).all()
+    assert (phi[mask > 0] > 0).all()              # warm-start exploration
+    np.testing.assert_allclose(phi.sum(-1)[mask.sum(-1) > 0], 1.0, atol=1e-5)
+
+    state = router.apply_scenario_event(state, DemandShift(at=2,
+                                                           lam_total=18.0))
+    assert router.lam_total == 18.0
+    np.testing.assert_allclose(np.asarray(router.lam).sum(), 18.0, rtol=1e-4)
+
+    # the router keeps serving after the event stream
+    rec = router.control_step(lambda lam: float(np.sum(lam)))
+    np.testing.assert_allclose(rec["lam"].sum(), 18.0, rtol=1e-4)
+    # dispatch weights stay consistent on the post-churn fleet
+    w = router.replica_weights()
+    alive_dep = np.asarray(router.graph.deploy)
+    assert (w[~alive_dep.astype(bool)] == 0).all()
+    np.testing.assert_allclose(w.sum(-1), 1.0, atol=1e-5)

@@ -1,0 +1,120 @@
+"""Serving control-plane latency: fused control step vs legacy host loop.
+
+The paper's whole point is *online* operation — the control loop's
+iteration latency bounds how fast the fleet adapts under churn.  This
+bench measures one `CECRouter.control_step` (all 2W perturbed
+observations + mirror ascent + exact projection + committed observation,
+one jitted call, DESIGN.md §11) at W ∈ {4, 16, 64} sessions, on both the
+jnp path and the Pallas kernel-dispatch path (interpret mode off-TPU —
+an execution proof, not a perf number there), against the pre-PR-3
+implementation preserved below: a Python ``for w in range(W)`` loop with
+2W host round-trips of NumPy mirror-ascent math.
+
+Smoke mode (CI) asserts the acceptance bar: ≥5× fused-over-legacy at
+W=16 on CPU.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import build_random_cec, dispatch, get_cost
+from repro.core.allocation import _project_box_simplex
+from repro.core.flow import total_cost
+from repro.core.routing import solve_routing
+from repro.serve import CECRouter
+from repro.topo import connected_er
+
+from . import common
+from .common import dump, emit, timeit
+
+SPEEDUP_BAR = 5.0     # acceptance: fused ≥ 5× legacy at W=16 (smoke/CI)
+
+
+def _legacy_control_step(graph, cost, lam, phi, lam_total, utility_fn,
+                         delta=0.5, eta_outer=0.05, eta_inner=3.0):
+    """The PR-2 ``CECRouter.control_step``: per-observation host loop.
+
+    Kept verbatim as the comparison baseline — and imported by
+    ``tests/test_serve.py::test_control_step_parity_with_reference_loop``
+    as the parity oracle, so the speedup bar and the parity guarantee
+    always describe the same code: 2W sequential `solve_routing`
+    dispatches, a `float()` device sync per observation, NumPy
+    mirror-ascent arithmetic.  Returns (Λ', φ) *without* the committed
+    observation the fused step appends.
+    """
+    W = graph.n_sessions
+    g = np.zeros(W, np.float32)
+    for w in range(W):
+        ew = jnp.zeros(W).at[w].set(1.0)
+        for sign in (+1.0, -1.0):
+            lam_p = lam + sign * delta * ew
+            phi, _ = solve_routing(graph, cost, lam_p, phi, eta_inner, 1)
+            u = utility_fn(np.asarray(lam_p)) - float(
+                total_cost(graph, cost, phi, lam_p))
+            g[w] += sign * u / (2 * delta)
+    z = eta_outer * (g - g.max())
+    wts = np.asarray(lam) * np.exp(z)
+    lam = jnp.asarray(lam_total * wts / wts.sum())
+    return _project_box_simplex(lam, lam_total, delta), phi
+
+
+def _make_graph(W: int, seed: int = 0):
+    n = max(20, 2 * W)             # one version per node ⇒ n ≥ W, headroom
+    p = min(0.35, max(0.12, 6.0 / n))
+    return build_random_cec(connected_er(n, p, seed=seed), W, 12.0,
+                            seed=seed)
+
+
+def main() -> list[dict]:
+    session_counts = common.scaled((4, 16, 64), (4, 16))
+    rows = []
+    for W in session_counts:
+        graph = _make_graph(W)
+        lam_total = 3.0 * W
+        quality = np.linspace(1.0, 2.0, W)
+        batched_fn = lambda lams: np.atleast_2d(lams) @ quality
+        scalar_fn = lambda lam: float(np.asarray(lam) @ quality)
+
+        router = CECRouter(graph, lam_total=lam_total)
+        _, fused_s = timeit(lambda: router.control_step(batched_fn),
+                            warmup=1, iters=common.scaled(10, 2))
+
+        lam0 = jnp.full((W,), lam_total / W)
+        phi0 = graph.uniform_phi()
+        _, legacy_s = timeit(
+            lambda: _legacy_control_step(graph, get_cost("exp"), lam0, phi0,
+                                         lam_total, scalar_fn),
+            warmup=1, iters=common.scaled(3, 1))
+
+        speedup = legacy_s / fused_s
+        rows.append({"W": W, "n_bar": graph.n_bar, "path": "jnp",
+                     "fused_us": fused_s * 1e6, "legacy_us": legacy_s * 1e6,
+                     "speedup": speedup})
+        emit(f"bench_router.W{W}.jnp", fused_s,
+             f"legacy_us={legacy_s*1e6:.0f};speedup={speedup:.1f}x")
+
+        # kernel-dispatch path: interpret mode off-TPU is an execution
+        # proof of the fused step on the Pallas branch, far slower than
+        # the fused einsums — smoke keeps it to the smallest W
+        if not common.SMOKE or W == session_counts[0]:
+            with dispatch.kernel_dispatch(1):
+                krouter = CECRouter(graph, lam_total=lam_total)
+                _, kernel_s = timeit(lambda: krouter.control_step(batched_fn),
+                                     warmup=1, iters=1)
+            rows.append({"W": W, "n_bar": graph.n_bar, "path": "kernel",
+                         "fused_us": kernel_s * 1e6})
+            emit(f"bench_router.W{W}.kernel", kernel_s,
+                 "interpret" if dispatch.kernel_interpret() else "tpu")
+
+    if common.SMOKE:
+        bar = next(r for r in rows if r["W"] == 16 and r["path"] == "jnp")
+        assert bar["speedup"] >= SPEEDUP_BAR, (
+            f"fused control step only {bar['speedup']:.1f}x over the legacy "
+            f"loop at W=16 (acceptance bar: {SPEEDUP_BAR}x)")
+    dump("bench_router", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -18,6 +18,12 @@ ART = pathlib.Path("experiments/paper")
 
 SMOKE = False
 
+# (name, seconds) for every emit() of the process — the harness
+# (benchmarks/run.py) snapshots len(RECORDS) around each module and slices
+# its rows out to compute the per-bench median latency recorded in the
+# perf-trajectory entry (BENCH_*.json).
+RECORDS: list[tuple[str, float]] = []
+
 
 def set_smoke(on: bool) -> None:
     """Flip smoke mode (call before importing/running bench modules)."""
@@ -46,6 +52,7 @@ def timeit(fn, *args, warmup: int = 1, iters: int = 3):
 
 
 def emit(name: str, seconds: float, derived: str):
+    RECORDS.append((name, seconds))
     print(f"{name},{seconds*1e6:.1f},{derived}")
 
 

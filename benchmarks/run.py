@@ -8,6 +8,12 @@ experiments/paper/ (consumed by EXPERIMENTS.md).
 ``common.set_smoke``): it exercises every module's kernel and batch paths
 end-to-end, writes a ``BENCH_smoke.json`` summary at the repo root (the
 uploaded CI artifact), and exits non-zero on any import or runtime error.
+It additionally appends one *perf-trajectory* entry per commit under
+``benchmarks/trajectory/BENCH_<shortsha>.json`` (stable schema: commit,
+commit date, per-bench median latency) — entries are committed with the
+PR that produced them, so the trajectory accumulates across PRs instead
+of one file being overwritten in place.  Smoke numbers are execution
+proofs for trend eyeballing, never perf claims.
 """
 from __future__ import annotations
 
@@ -15,6 +21,8 @@ import argparse
 import json
 import pathlib
 import platform
+import statistics
+import subprocess
 import sys
 import time
 import traceback
@@ -24,14 +32,68 @@ from . import common
 MODULES = ("fig7_routing_convergence", "fig8_9_network_size",
            "fig10_utility_functions", "fig11_single_loop",
            "table2_topologies", "bench_kernels", "bench_batched",
-           "bench_scenarios", "perf_iterations")
+           "bench_scenarios", "bench_router", "perf_iterations")
+
+TRAJECTORY_DIR = pathlib.Path("benchmarks/trajectory")
+TRAJECTORY_SCHEMA = 1
+
+
+def _git(*args: str) -> str:
+    try:
+        return subprocess.run(["git", *args], capture_output=True,
+                              text=True, check=True).stdout.strip()
+    except Exception:  # noqa: BLE001 — detached/dirty/missing git all OK
+        return "unknown"
+
+
+def _tree_dirty() -> bool:
+    """Uncommitted changes beyond the bench artifacts themselves."""
+    status = _git("status", "--porcelain")
+    if status == "unknown":
+        return True
+    return any(
+        line and "BENCH_smoke.json" not in line
+        and "benchmarks/trajectory/" not in line
+        for line in status.splitlines())
+
+
+def write_trajectory_entry(summary: dict) -> pathlib.Path:
+    """One BENCH_<shortsha>.json per commit so the trajectory accumulates.
+
+    Schema (stable across PRs — consumers may rely on these keys):
+      schema: int, commit: str, date: str (commit ISO date), dirty: bool
+      (worktree had non-artifact changes beyond ``commit`` when measured),
+      smoke: bool, jax/backend/python: str, benches: {module: {status,
+      seconds, med_latency_us|None}} — ``med_latency_us`` is the median
+      over the module's emitted CSV rows.  Only full runs write an entry
+      (``--only`` subsets would masquerade as a complete record).
+    """
+    import jax
+
+    commit = _git("rev-parse", "--short", "HEAD")
+    entry = {
+        "schema": TRAJECTORY_SCHEMA,
+        "commit": commit,
+        "date": _git("show", "-s", "--format=%cI", "HEAD"),
+        "dirty": _tree_dirty(),
+        "smoke": common.SMOKE,
+        "python": platform.python_version(),
+        "jax": jax.__version__,
+        "backend": jax.default_backend(),
+        "benches": summary,
+    }
+    TRAJECTORY_DIR.mkdir(parents=True, exist_ok=True)
+    path = TRAJECTORY_DIR / f"BENCH_{commit}.json"
+    path.write_text(json.dumps(entry, indent=1, default=str))
+    return path
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="")
     ap.add_argument("--smoke", action="store_true",
-                    help="tiny sizes, 1 warmup/1 iter; write BENCH_smoke.json")
+                    help="tiny sizes, 1 warmup/1 iter; write BENCH_smoke.json"
+                         " + a benchmarks/trajectory/ entry")
     args = ap.parse_args()
     only = {s.strip() for s in args.only.split(",") if s.strip()}
     common.set_smoke(args.smoke)
@@ -42,16 +104,22 @@ def main() -> None:
         if only and not any(mod.startswith(o) for o in only):
             continue
         t0 = time.perf_counter()
+        n_records = len(common.RECORDS)
         try:
             m = __import__(f"benchmarks.{mod}", fromlist=["main"])
             rows = m.main()
+            lat = [s for _, s in common.RECORDS[n_records:]]
             summary[mod] = {"status": "ok",
                             "seconds": round(time.perf_counter() - t0, 3),
+                            "med_latency_us":
+                                round(statistics.median(lat) * 1e6, 1)
+                                if lat else None,
                             "rows": rows if isinstance(rows, (list, dict))
                             else None}
         except Exception as e:  # noqa: BLE001
             failed.append((mod, repr(e)))
             summary[mod] = {"status": "error", "error": repr(e),
+                            "med_latency_us": None,
                             "seconds": round(time.perf_counter() - t0, 3)}
             traceback.print_exc()
 
@@ -66,6 +134,11 @@ def main() -> None:
             json.dumps(out, indent=1, default=str))
         print(f"wrote BENCH_smoke.json ({len(summary)} modules, "
               f"{len(failed)} failed)", file=sys.stderr)
+        if not only:        # a --only subset is not a trajectory point
+            traj = write_trajectory_entry(
+                {mod: {k: v for k, v in s.items() if k != "rows"}
+                 for mod, s in summary.items()})
+            print(f"wrote {traj}", file=sys.stderr)
 
     if failed:
         print("FAILED:", failed, file=sys.stderr)

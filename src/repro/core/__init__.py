@@ -1,6 +1,8 @@
 """Core CEC control plane: the paper's JOWR contribution in JAX."""
 from . import dispatch
-from .allocation import JOWRResult, allocation_kkt_residual, gs_oma
+from .allocation import (ControlStep, JOWRResult, allocation_kkt_residual,
+                         control_step, fused_control_step, gs_oma,
+                         perturbed_allocations)
 from .batch import (CECGraphBatch, pad_graph, solve_jowr_batch,
                     solve_routing_batch, stack_banks)
 from .costs import CostFn, get as get_cost
@@ -10,19 +12,21 @@ from .graph import (CECGraph, InfeasibleTopology, InstanceDraw,
 from .jowr import solve_jowr
 from .marginal import marginals, phi_gradient
 from .opt_baseline import exact_gradient_allocation, frank_wolfe_routing
-from .routing import (RoutingState, kkt_residual, omd_step,
+from .routing import (RoutingState, kkt_residual, omd_step, oracle_observe,
                       project_simplex_masked, sgp_step, solve_routing,
                       solve_routing_sgp, warm_start_phi)
 from .scenario import (BankSwap, CapacityScale, DemandShift, Event, NodeFail,
                        NodeJoin, Rewire, Scenario, ScenarioResult,
                        ScenarioState, apply_event, compile_segments,
-                       initial_state, named_scenarios, run_scenario,
-                       scenario_metrics, segment_optima)
+                       event_schedule, initial_state, named_scenarios,
+                       run_scenario, scenario_metrics, segment_optima)
 from .single_loop import omad
 from .utility import UtilityBank, make_bank
 
 __all__ = [
-    "JOWRResult", "allocation_kkt_residual", "gs_oma", "CostFn", "get_cost",
+    "ControlStep", "JOWRResult", "allocation_kkt_residual", "control_step",
+    "fused_control_step", "gs_oma", "oracle_observe",
+    "perturbed_allocations", "CostFn", "get_cost",
     "cost_and_state", "link_flows", "propagate", "total_cost", "CECGraph",
     "InfeasibleTopology", "InstanceDraw", "build_augmented",
     "build_random_cec", "draw_instance", "solve_jowr",
@@ -34,6 +38,6 @@ __all__ = [
     "stack_banks", "dispatch",
     "Event", "Rewire", "NodeFail", "NodeJoin", "CapacityScale", "BankSwap",
     "DemandShift", "Scenario", "ScenarioState", "ScenarioResult",
-    "apply_event", "initial_state", "compile_segments", "run_scenario",
-    "scenario_metrics", "segment_optima", "named_scenarios",
+    "apply_event", "initial_state", "compile_segments", "event_schedule",
+    "run_scenario", "scenario_metrics", "segment_optima", "named_scenarios",
 ]

@@ -5,27 +5,41 @@ allocations Λ ± δ·e_w, lets the routing layer serve them (the oracle 𝔒 =
 OMD-RT, Assumption 4), and observes the resulting scalar network utilities
 U± — two-point gradient sampling (Flaxman et al.).  The estimated gradient
 feeds an online mirror-ascent step on the scaled simplex {Σλ_w = λ}
-(eq. (10)), followed by the box projection P_[δ,λ−δ].
+(eq. (10)), followed by the exact projection onto the box-simplex
+intersection P_[δ,λ−δ].
+
+The single outer iteration is factored out as :func:`control_step` — one
+`lax.scan` over the 2W perturbed observations, mirror ascent, projection,
+and a final observation at the *committed* allocation — so the offline
+solver (`gs_oma`, batched/vmapped by `core/batch.py`) and the live serving
+router (`serve/cec_router.py`, via the jitted :func:`fused_control_step`)
+run the *same* update math; there is no second implementation anywhere
+(DESIGN.md §11).  Task utilities enter `control_step` as a precomputed
+[2W] vector: the perturbed admissions of an iteration depend only on Λ^t,
+so a bank evaluates them under vmap inside the jit while a serving fleet
+measures them out-of-band and injects the observations.
 
 The same engine with ``inner_iters=1`` *is* the single-loop OMAD algorithm
 (Alg. 3): the routing iterate φ is carried across all oracle invocations and
 improves by exactly one mirror-descent step per observation, never waiting
 for inner convergence (see single_loop.py).
 
-Everything scans under jit — T outer iterations × W sessions × 2 oracle
-calls × K routing steps with zero Python in the loop.
+Everything scans under jit — T outer iterations × (2W + 1) oracle calls ×
+K routing steps with zero Python in the loop.
 """
 from __future__ import annotations
 
+import functools
 from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
 
+from . import costs as _costs
+from . import dispatch
 from .costs import CostFn
-from .flow import total_cost
 from .graph import CECGraph
-from .routing import solve_routing
+from .routing import oracle_observe
 from .utility import UtilityBank
 
 Array = jnp.ndarray
@@ -38,23 +52,155 @@ class JOWRResult(NamedTuple):
     lam_traj: Array     # [T, W]
 
 
-def _observe(graph: CECGraph, cost: CostFn, bank: UtilityBank, lam: Array,
-             phi: Array, eta_inner: float, inner_iters: int):
-    """Admit Λ, run the routing oracle, observe U = Σu_w − ΣD_ij."""
-    phi, _ = solve_routing(graph, cost, lam, phi, eta_inner, inner_iters)
-    U = bank.total(lam) - total_cost(graph, cost, phi, lam)
-    return U, phi
+class ControlStep(NamedTuple):
+    """One fused outer iteration (Alg. 1/3 lines 4–9 + committed observe)."""
+
+    lam: Array          # [W] committed allocation Λ^{t+1}
+    phi: Array          # [W, Nb, Nb] routing after the committed observation
+    grad: Array         # [W] two-point gradient estimate ĝ^t
+    cost: Array         # scalar network cost D(Λ^{t+1}, φ^{t+1})
 
 
-def _project_box_simplex(lam: Array, lam_total: float, delta: float) -> Array:
-    """P_[δ,λ−δ] (Alg. 1 line 9) then restore Σλ_w = λ (DESIGN.md §8.3).
+def _project_box_simplex(lam: Array, lam_total, delta: float) -> Array:
+    """Exact projection onto {δ ≤ λ_w ≤ λ−δ, Σλ_w = λ} (Alg. 1 line 9).
+
+    Euclidean projection in closed form: x = clip(y − τ*, δ, λ−δ) where τ*
+    solves Σ_w x_w(τ) = λ.  The sum is piecewise linear and non-increasing
+    in τ with breakpoints {y_w − δ, y_w − (λ−δ)}; sorting the 2W
+    breakpoints and interpolating on the bracketing segment gives the exact
+    τ* (water-filling on the dual), no iterative tolerance involved.  For
+    infeasible targets (λ outside [Wδ, W(λ−δ)]) the clip saturates at the
+    nearest box vertex.
 
     Last-axis semantics so stacked ``[B, W]`` iterates (the scenario
     engine's per-instance rows) project exactly like a single ``[W]``.
     """
-    lam = jnp.clip(lam, delta, lam_total - delta)
-    lam = lam * (lam_total / lam.sum(-1, keepdims=True))
-    return jnp.clip(lam, delta, lam_total - delta)
+    lo, hi = delta, lam_total - delta
+    y = jnp.asarray(lam)
+    bp = jnp.sort(jnp.concatenate([y - lo, y - hi], axis=-1), -1)  # [..., 2W]
+    # Σ clip(y − τ) evaluated at every breakpoint: non-increasing in τ,
+    # from W·(λ−δ) at bp[0] down to W·δ at bp[-1].
+    s = jnp.clip(y[..., None, :] - bp[..., :, None], lo, hi).sum(-1)
+    # bracketing segment: largest k with s_k ≥ λ (linear on [bp_k, bp_k+1])
+    k = jnp.clip((s >= lam_total).sum(-1, keepdims=True) - 1,
+                 0, bp.shape[-1] - 2)
+    t0 = jnp.take_along_axis(bp, k, -1)
+    t1 = jnp.take_along_axis(bp, k + 1, -1)
+    s0 = jnp.take_along_axis(s, k, -1)
+    s1 = jnp.take_along_axis(s, k + 1, -1)
+    drop = jnp.where(s0 > s1, s0 - s1, 1.0)
+    frac = jnp.where(s0 > s1, (s0 - lam_total) / drop, 0.0)
+    tau = t0 + frac * (t1 - t0)
+    return jnp.clip(y - tau, lo, hi)
+
+
+def _perturbation_basis(W: int) -> tuple[Array, Array]:
+    """([2W] signs, [2W, W] directions) — THE observation order.
+
+    Single source of truth shared by :func:`perturbed_allocations` (which
+    callers use to evaluate task utilities up front) and
+    :func:`control_step`'s scan (which pairs those utilities positionally
+    with its observations): rows (2w, 2w+1) are (+e_w, −e_w).
+    """
+    signs = jnp.tile(jnp.asarray([1.0, -1.0], jnp.float32), W)
+    dirs = jnp.repeat(jnp.eye(W, dtype=jnp.float32), 2, axis=0)
+    return signs, dirs
+
+
+def perturbed_allocations(lam: Array, delta: float) -> Array:
+    """[2W, W] admissions of one outer iteration: rows (2w, 2w+1) = Λ ± δ·e_w.
+
+    The row order is the observation order of :func:`control_step`'s scan
+    (see :func:`_perturbation_basis`).  Callers evaluate task utilities
+    over these rows up front — under vmap for a closed-form bank, or
+    batched through a measured-utility callback for a live fleet (the 2W
+    admissions depend only on Λ^t, never on φ).
+    """
+    signs, dirs = _perturbation_basis(lam.shape[-1])
+    return lam + signs[:, None] * delta * dirs
+
+
+def control_step(
+    graph: CECGraph,
+    cost: CostFn,
+    lam: Array,
+    phi: Array,
+    task_utilities: Array,
+    *,
+    lam_total,
+    delta: float = 0.5,
+    eta_outer: float = 0.05,
+    eta_inner: float = 0.05,
+    inner_iters: int = 1,
+) -> ControlStep:
+    """One fused outer iteration of GS-OMA/OMAD on the current iterates.
+
+    ``task_utilities`` is the [2W] vector of *task* utilities Σ_w u_w(λ_w)
+    observed for the perturbed admissions of :func:`perturbed_allocations`
+    (same row order); the network-cost half of each observation is computed
+    here, at the routing iterate the oracle reached for that admission.
+    The scan carries φ through all 2W observations (one oracle invocation
+    each), takes the mirror-ascent step, projects exactly onto the
+    box-simplex, then observes once more at the committed allocation so
+    the returned (lam, phi, cost) are mutually consistent — the paper's
+    U(Λ^t, φ^t).  Pure traceable JAX: `gs_oma` scans it, `core/batch.py`
+    vmaps it, `fused_control_step` jits it for the serving router.
+    """
+    W = graph.n_sessions
+    signs, dirs = _perturbation_basis(W)
+
+    def observe(carry, inp):
+        g, phi = carry
+        sign, ew, task_u = inp
+        lam_p = lam + sign * delta * ew
+        phi, D = oracle_observe(graph, cost, lam_p, phi, eta_inner,
+                                inner_iters)
+        g = g + sign * ((task_u - D) / (2.0 * delta)) * ew  # Alg. 1 line 6
+        return (g, phi), None
+
+    (g, phi), _ = jax.lax.scan(observe, (jnp.zeros(W), phi),
+                               (signs, dirs, task_utilities))
+    # online mirror ascent on the scaled simplex (eq. (10))
+    z = eta_outer * g
+    z = z - z.max()
+    w = lam * jnp.exp(z)
+    lam_new = lam_total * w / w.sum()
+    lam_new = _project_box_simplex(lam_new, lam_total, delta)
+    phi, D = oracle_observe(graph, cost, lam_new, phi, eta_inner, inner_iters)
+    return ControlStep(lam=lam_new, phi=phi, grad=g, cost=D)
+
+
+@functools.lru_cache(maxsize=None)
+def _fused_control_step(cost_name: str, delta: float, eta_outer: float,
+                        eta_inner: float, inner_iters: int, _dispatch_key):
+    cost = _costs.get(cost_name)
+
+    def fn(graph, lam, phi, task_utilities, lam_total):
+        return control_step(graph, cost, lam, phi, task_utilities,
+                            lam_total=lam_total, delta=delta,
+                            eta_outer=eta_outer, eta_inner=eta_inner,
+                            inner_iters=inner_iters)
+
+    return jax.jit(fn)
+
+
+def fused_control_step(cost_name: str, *, delta: float = 0.5,
+                       eta_outer: float = 0.05, eta_inner: float = 0.05,
+                       inner_iters: int = 1):
+    """The jitted fused control step, cached on its static knobs.
+
+    Returns ``fn(graph, lam, phi, task_utilities, lam_total) ->
+    ControlStep``.  ``graph`` is a pytree argument, so same-shape topology
+    changes (the scenario engine's stable-index churn) reuse the compiled
+    executable, and ``lam_total`` is traced so demand shifts never retrace.
+    ``eta_inner`` stays a static Python float — a kernel-path requirement
+    (DESIGN.md §9.2).  The cache is additionally keyed on the kernel
+    dispatch state so tracing inside ``dispatch.kernel_dispatch`` gets the
+    Pallas branch instead of a stale jnp-path trace.
+    """
+    return _fused_control_step(cost_name, float(delta), float(eta_outer),
+                               float(eta_inner), int(inner_iters),
+                               dispatch.state_key())
 
 
 def gs_oma(
@@ -75,29 +221,19 @@ def gs_oma(
     W = graph.n_sessions
     lam0 = jnp.full((W,), lam_total / W) if lam0 is None else lam0
     phi0 = graph.uniform_phi() if phi0 is None else phi0
-    eyes = jnp.eye(W)
 
     def outer(carry, _):
         lam, phi = carry
-
-        def per_session(c, ew):
-            grads, phi = c
-            up, phi = _observe(graph, cost, bank, lam + delta * ew, phi,
-                               eta_inner, inner_iters)
-            um, phi = _observe(graph, cost, bank, lam - delta * ew, phi,
-                               eta_inner, inner_iters)
-            g = (up - um) / (2.0 * delta)            # Alg. 1 line 6
-            return (grads + g * ew, phi), None
-
-        (g, phi), _ = jax.lax.scan(per_session, (jnp.zeros(W), phi), eyes)
-        # online mirror ascent on the scaled simplex (eq. (10))
-        z = eta_outer * g
-        z = z - z.max()
-        w = lam * jnp.exp(z)
-        lam_new = lam_total * w / w.sum()
-        lam_new = _project_box_simplex(lam_new, lam_total, delta)
-        U_t = bank.total(lam_new) - total_cost(graph, cost, phi, lam_new)
-        return (lam_new, phi), (U_t, lam_new)
+        task_u = jax.vmap(bank.total)(perturbed_allocations(lam, delta))
+        step = control_step(graph, cost, lam, phi, task_u,
+                            lam_total=lam_total, delta=delta,
+                            eta_outer=eta_outer, eta_inner=eta_inner,
+                            inner_iters=inner_iters)
+        # the recorded U_t is the paper's U(Λ^t, φ^t): task utility and
+        # network cost both evaluated at the *committed* iterates, not at
+        # the last perturbed observation
+        U_t = bank.total(step.lam) - step.cost
+        return (step.lam, step.phi), (U_t, step.lam)
 
     (lam, phi), (u_traj, lam_traj) = jax.lax.scan(
         outer, (lam0, phi0), None, length=outer_iters)

@@ -82,6 +82,18 @@ def kernel_dispatch(threshold: int):
         _threshold, _explicit = prev
 
 
+def state_key() -> tuple[int, bool]:
+    """Hashable snapshot of the dispatch configuration.
+
+    Callers that *cache jitted functions* (e.g. ``allocation.
+    fused_control_step``) must key their cache on this so that tracing
+    under ``kernel_dispatch``/``set_kernel_threshold`` gets a fresh trace
+    instead of silently reusing a cached jnp-path executable (see the
+    module docstring's trace-time caveat).
+    """
+    return (_threshold, _explicit)
+
+
 def use_kernels(n_bar: int) -> bool:
     """True when a graph of ``n_bar`` augmented nodes should use kernels.
 

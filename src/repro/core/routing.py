@@ -33,7 +33,7 @@ import jax.numpy as jnp
 
 from . import dispatch
 from .costs import CostFn
-from .flow import cost_and_state
+from .flow import cost_and_state, total_cost
 from .graph import CECGraph
 from .marginal import marginals
 
@@ -101,6 +101,22 @@ def solve_routing(graph: CECGraph, cost: CostFn, lam: Array, phi0: Array,
 
     phi, traj = jax.lax.scan(step, phi0, None, length=n_iters)
     return phi, traj
+
+
+def oracle_observe(graph: CECGraph, cost: CostFn, lam: Array, phi: Array,
+                   eta: float, n_iters: int) -> tuple[Array, Array]:
+    """Admit ``lam``, run the oracle 𝔒, price what it served.
+
+    This is the single observation primitive of the bandit loop (Assumption
+    4): the routing iterate advances ``n_iters`` mirror-descent steps for
+    the admitted allocation, then the network cost D(Λ, φ') at the
+    *post-update* iterate is what the controller's scalar feedback is built
+    from.  Returns (φ', D).  Both `gs_oma`/`control_step`
+    (core/allocation.py) and the serving router observe through here, so
+    there is exactly one definition of "what an observation does to φ".
+    """
+    phi, _ = solve_routing(graph, cost, lam, phi, eta, n_iters)
+    return phi, total_cost(graph, cost, phi, lam)
 
 
 # --------------------------------------------------------------------------

@@ -251,6 +251,22 @@ def apply_event(state: ScenarioState, ev: Event) -> ScenarioState:
 # segment compilation
 # ---------------------------------------------------------------------------
 
+def event_schedule(scenario: Scenario
+                   ) -> tuple[tuple[int, tuple[Event, ...]], ...]:
+    """(segment_start, events firing there) pairs covering the horizon.
+
+    The first entry is ``(0, ())`` — the initial segment.  This is the one
+    definition of "when does what fire": :func:`compile_segments` consumes
+    it for the offline batched sweeps and the serving simulation
+    (``serve/sim.py``) replays the same schedule against the live router,
+    so what is benchmarked is what serves (DESIGN.md §11).
+    """
+    bounds = (0,) + scenario.event_times + (scenario.horizon,)
+    return tuple(
+        (start, tuple(e for e in scenario.events if e.at == start))
+        for start in bounds[:-1])
+
+
 class Segment(NamedTuple):
     start: int                  # first outer iteration of the segment
     n_iters: int
@@ -269,17 +285,17 @@ def compile_segments(scenario: Scenario,
     metadata — segments of equal length reuse one compiled solver.
     """
     states = [initial_state(scenario, s) for s in seeds]
-    bounds = (0,) + scenario.event_times + (scenario.horizon,)
+    sched = event_schedule(scenario)
+    ends = tuple(start for start, _ in sched[1:]) + (scenario.horizon,)
 
     raw: list[tuple[int, int, tuple[Event, ...], list[CECGraph],
                     list[UtilityBank], float]] = []
-    for k, start in enumerate(bounds[:-1]):
-        evs = tuple(e for e in scenario.events if e.at == start)
+    for (start, evs), end in zip(sched, ends):
         for e in evs:                      # () for the first segment
             states = [apply_event(st, e) for st in states]
         lam_totals = {st.lam_total for st in states}
         assert len(lam_totals) == 1       # events are seed-uniform in λ
-        raw.append((start, bounds[k + 1] - start, evs,
+        raw.append((start, end - start, evs,
                     [st.graph() for st in states],
                     [st.bank for st in states], lam_totals.pop()))
 

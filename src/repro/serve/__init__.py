@@ -1,4 +1,6 @@
 from .cec_router import CECRouter
 from .engine import InferenceEngine, Request
+from .sim import ServingSim, SimReport
 
-__all__ = ["CECRouter", "InferenceEngine", "Request"]
+__all__ = ["CECRouter", "InferenceEngine", "Request", "ServingSim",
+           "SimReport"]

@@ -1,14 +1,19 @@
 """CEC router: the paper's control plane driving live serving decisions.
 
 The router owns the JOWR state (Λ, φ) for a fleet of edge devices, each
-hosting one model version.  Every control interval it:
+hosting one model version, and keeps it *device-resident*: every control
+interval is one jitted fused call — ``core.allocation.fused_control_step``,
+the exact scan body ``gs_oma`` runs — covering all 2W perturbed
+observations, the mirror-ascent/projection update, and the committed
+observation, with no per-session Python loop and no solver math of its
+own.  Each interval it:
 
- 1. observes the realized network utility (measured quality-weighted
-    throughput minus flow-model network cost — a black box to the router,
-    exactly the paper's bandit feedback);
- 2. advances the OMAD single-loop (Alg. 3) one outer iteration — gradient
-    sampling over the perturbed allocations, one mirror-descent routing
-    step per observation;
+ 1. admits the 2W perturbed allocations Λ ± δ·e_w and collects their
+    *measured* task utilities through the utility callback (batched in one
+    call where the utility source allows it — see :func:`_call_utility`);
+ 2. advances OMAD (Alg. 3) one outer iteration on device, the network-cost
+    half of every observation priced at the routing iterate the oracle
+    reached for that admission;
  3. exposes the new admission split Λ/λ (which version serves what share
     of traffic) and per-replica dispatch weights t_i(w)/λ_w (how much of
     version w's traffic each deploying device processes).
@@ -18,14 +23,16 @@ with an exploration mix (``core.routing.warm_start_phi``) — the Fig. 11
 online-adaptation behaviour.  The router also consumes the scenario
 engine's event stream directly (``apply_scenario_event``, DESIGN.md §10):
 the same declarative events that drive offline scenario sweeps drive the
-live control plane, so what is benchmarked is what serves.
+live control plane, and because the scenario engine keeps the node-index
+space stable (dead node == isolated index), same-shape churn never
+retraces the fused step.
 
-The router's observe path runs through ``core.flow`` / ``core.routing``
-and therefore inherits the size-based kernel dispatch (core/dispatch.py)
-for free: a fleet whose augmented graph clears the threshold serves its
-flow-propagation and mirror-descent steps from the Pallas kernels on TPU
-backends (off-TPU the kernels engage only under an explicit override, in
-interpret mode) with no change here.
+The fused step runs through ``core.flow`` / ``core.routing`` and therefore
+inherits the size-based kernel dispatch (core/dispatch.py): a fleet whose
+augmented graph clears the threshold serves its flow-propagation and
+mirror-descent steps from the Pallas kernels on TPU backends (off-TPU the
+kernels engage only under an explicit override, in interpret mode), the
+dispatch state being part of the jit-cache key (DESIGN.md §11).
 """
 from __future__ import annotations
 
@@ -34,11 +41,32 @@ import dataclasses
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import CECGraph, get_cost, propagate, total_cost
-from repro.core.allocation import _observe, _project_box_simplex
-from repro.core.routing import solve_routing, warm_start_phi
+from repro.core import CECGraph, propagate
+from repro.core.allocation import (_project_box_simplex, fused_control_step,
+                                   perturbed_allocations)
+from repro.core.routing import warm_start_phi
 from repro.core.scenario import (DemandShift, Event, ScenarioState,
                                  apply_event)
+
+
+def _call_utility(utility_fn, lams: np.ndarray) -> np.ndarray:
+    """Evaluate the measured-utility callback over a [K, W] admission stack.
+
+    Contract (DESIGN.md §11): ``utility_fn(lams: [K, W]) -> [K]`` measured
+    task utilities.  A legacy scalar callable ``fn(lam: [W]) -> float`` is
+    detected (wrong output shape, or the batched call raising a shape-type
+    error) and evaluated row by row — correct either way, just 2W calls
+    instead of 1.  Other exception types propagate: a conforming batched
+    callback failing for a real reason must not be silently retried.
+    """
+    lams = np.asarray(lams)
+    try:
+        out = np.asarray(utility_fn(lams), np.float32).reshape(-1)
+        if out.shape == (lams.shape[0],):
+            return out
+    except (TypeError, ValueError, IndexError):
+        pass
+    return np.asarray([float(utility_fn(row)) for row in lams], np.float32)
 
 
 @dataclasses.dataclass
@@ -48,42 +76,47 @@ class CECRouter:
     delta: float = 0.5
     eta_outer: float = 0.05
     eta_inner: float = 3.0
+    inner_iters: int = 1
     cost_name: str = "exp"
 
     def __post_init__(self):
-        self.cost = get_cost(self.cost_name)
         W = self.graph.n_sessions
-        self.lam = jnp.full((W,), self.lam_total / W)
+        # strong dtype: a weak-typed seed would retrace the fused step once
+        # its first output (strong float32) replaces it
+        self.lam = jnp.full((W,), self.lam_total / W, jnp.float32)
         self.phi = self.graph.uniform_phi()
         self.history: list[dict] = []
 
-    # -- the bandit observation the paper assumes ---------------------------
-    def _utility(self, measured_task_utility: float, lam) -> float:
-        return measured_task_utility - float(
-            total_cost(self.graph, self.cost, self.phi, lam))
+    def _step_fn(self):
+        # resolved per call (lru-cached): picks up the live kernel-dispatch
+        # state instead of freezing the trace taken at construction time
+        return fused_control_step(self.cost_name, delta=self.delta,
+                                  eta_outer=self.eta_outer,
+                                  eta_inner=self.eta_inner,
+                                  inner_iters=self.inner_iters)
 
     def control_step(self, utility_fn) -> dict:
-        """One OMAD outer iteration.  ``utility_fn(lam) -> float`` returns
-        the *measured* task utility for an admitted allocation (the engine
-        serves the perturbed split and reports quality-weighted goodput)."""
-        W = self.graph.n_sessions
-        g = np.zeros(W, np.float32)
-        for w in range(W):
-            ew = jnp.zeros(W).at[w].set(1.0)
-            for sign in (+1.0, -1.0):
-                lam_p = self.lam + sign * self.delta * ew
-                self.phi, _ = solve_routing(self.graph, self.cost, lam_p,
-                                            self.phi, self.eta_inner, 1)
-                u = utility_fn(np.asarray(lam_p)) - float(
-                    total_cost(self.graph, self.cost, self.phi, lam_p))
-                g[w] += sign * u / (2 * self.delta)
-        z = self.eta_outer * (g - g.max())
-        wts = np.asarray(self.lam) * np.exp(z)
-        lam = jnp.asarray(self.lam_total * wts / wts.sum())
-        self.lam = _project_box_simplex(lam, self.lam_total, self.delta)
+        """One OMAD outer iteration, fused on device.
+
+        ``utility_fn`` reports the *measured* task utility for admitted
+        allocations (the engine serves the split and reports
+        quality-weighted goodput): called once with the [2W, W] stack of
+        perturbed admissions and once with the committed allocation (see
+        :func:`_call_utility` for the batched/scalar contract).  Everything
+        else — oracle invocations, gradient estimate, mirror ascent, exact
+        projection, committed observation — is a single jitted call; (Λ, φ)
+        never leave the device.
+        """
+        pert = perturbed_allocations(self.lam, self.delta)
+        task_u = jnp.asarray(_call_utility(utility_fn, np.asarray(pert)))
+        step = self._step_fn()(self.graph, self.lam, self.phi, task_u,
+                               jnp.float32(self.lam_total))
+        self.lam, self.phi = step.lam, step.phi
+        u_task = float(_call_utility(utility_fn, np.asarray(self.lam)[None])[0])
         rec = {"lam": np.asarray(self.lam).copy(),
-               "cost": float(total_cost(self.graph, self.cost, self.phi,
-                                        self.lam))}
+               "cost": float(step.cost),
+               "utility": u_task - float(step.cost),
+               "grad": np.asarray(step.grad).copy()}
         self.history.append(rec)
         return rec
 

@@ -52,11 +52,15 @@ class InferenceEngine:
             lambda p, t, c: M.decode_step(cfg, p, t, c))
 
     def submit(self, req: Request):
+        if len(req.prompt) > self.max_len:
+            raise ValueError(
+                f"prompt length {len(req.prompt)} exceeds the cache window "
+                f"(max_len={self.max_len})")
         self.queue.append(req)
 
     def _admit(self):
-        for i, s in enumerate(self.slots):
-            if s is None and self.queue:
+        for i in range(self.max_batch):
+            while self.slots[i] is None and self.queue:
                 req = self.queue.popleft()
                 # prefill this slot (batch-1 prefill, then graft the cache)
                 logits, cache1 = M.prefill(
@@ -75,7 +79,15 @@ class InferenceEngine:
                             one.astype(full.dtype)),
                         self.cache[key], cache1[key])
                 req.output.append(int(jnp.argmax(logits[0])))
-                self.slots[i] = req
+                # prefill holds len(prompt) cache entries and already emitted
+                # output[0]; a decode slot is claimed only if the request
+                # wants more tokens AND the next decode's cache write (index
+                # len(prompt) + len(output) - 1) stays inside the window —
+                # otherwise the request completes here and the slot is free
+                # for the next queued request
+                if not req.done and \
+                        len(req.prompt) + len(req.output) <= self.max_len:
+                    self.slots[i] = req
 
     def step(self) -> int:
         """One decode step for all active slots; returns #active."""
@@ -93,7 +105,11 @@ class InferenceEngine:
             req = self.slots[i]
             req.output.append(int(nxt[i]))
             self.tokens_served += 1
-            if req.done or len(req.output) + len(req.prompt) >= self.max_len:
+            # free the slot when done or when the *next* decode would write
+            # at index len(prompt) + len(output) - 1 >= max_len, i.e. past
+            # the grafted window; `>` (not `>=`) lets the final window slot
+            # max_len - 1 be used instead of wasting it
+            if req.done or len(req.output) + len(req.prompt) > self.max_len:
                 self.slots[i] = None
         return len(active)
 

@@ -1,0 +1,154 @@
+"""Request-driven serving simulation: the fleet in the loop (DESIGN.md §11).
+
+Closes the serving loop end-to-end: `InferenceEngine` replicas decode real
+(reduced-config) model traffic with continuous batching, the `CECRouter`'s
+fused control step decides admission and dispatch from *measured* utility,
+and the scenario engine's declarative events churn the fleet underneath —
+what is benchmarked offline is what serves here.
+
+One engine per model version.  Each control interval the sim
+
+ 1. replays any scenario events scheduled for this interval against the
+    live router (`CECRouter.apply_scenario_event`, the same
+    `core.scenario.event_schedule` the offline sweeps compile);
+ 2. admits a batch of requests — version sampled from the router's
+    admission split Λ/λ, replica from its dispatch weights t_i(w)/λ_w —
+    and runs the engines a fixed number of decode steps;
+ 3. folds the decoded tokens into a per-version goodput EMA (tokens
+    actually served per admitted request: queueing and window truncation
+    show up here as congestion);
+ 4. advances the router one fused control step against the measured task
+    utility  û(Λ) = Σ_w λ_w · quality_w · goodput_w — the batched
+    measured-utility callback contract of `CECRouter.control_step`.
+
+The quality ladder defaults to linspace(1, 2, W), mirroring
+`core.utility.make_bank`: larger versions earn more per token, so the
+router faces the paper's trade-off between task utility and network cost.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import numpy as np
+
+from repro.core.scenario import Scenario, ScenarioState, event_schedule, \
+    initial_state
+
+from .cec_router import CECRouter
+from .engine import InferenceEngine, Request
+
+
+class SimReport(NamedTuple):
+    utility: np.ndarray      # [T] measured network utility per interval
+    lam: np.ndarray          # [T, W] admission split trajectory
+    tokens: np.ndarray       # [T] tokens decoded per interval
+    goodput: np.ndarray      # [W] final per-version goodput estimate
+    events: list             # [(interval, event kind), ...] as fired
+    tokens_served: int       # total decode tokens across all engines
+
+
+@dataclasses.dataclass
+class ServingSim:
+    """Drive `InferenceEngine` traffic against the router under a scenario.
+
+    ``scenario.horizon`` is the number of control intervals; its events
+    replay at their scheduled interval.  ``cfg``/``params`` are a model
+    config and initialized parameters shared by every version's engine
+    (versions differ by their quality weight, not their weights — the
+    control plane only sees quality-weighted goodput either way).
+    """
+
+    scenario: Scenario
+    cfg: object
+    params: object
+    seed: int = 0
+    requests_per_interval: int = 8
+    engine_steps_per_interval: int = 8
+    prompt_len: int = 6
+    max_new_tokens: int = 4
+    max_batch: int = 4
+    max_len: int = 64
+    quality: np.ndarray | None = None
+    goodput_ema: float = 0.5
+    delta: float = 0.5
+    eta_outer: float = 0.05
+    eta_inner: float = 3.0
+
+    def __post_init__(self):
+        self.state: ScenarioState = initial_state(self.scenario, self.seed)
+        self.router = CECRouter(self.state.graph(),
+                                lam_total=self.state.lam_total,
+                                delta=self.delta, eta_outer=self.eta_outer,
+                                eta_inner=self.eta_inner)
+        self.n_versions = self.state.deploy.shape[0]
+        if self.quality is None:
+            self.quality = np.linspace(1.0, 2.0, self.n_versions)
+        self.engines = [InferenceEngine(self.cfg, self.params,
+                                        max_batch=self.max_batch,
+                                        max_len=self.max_len)
+                        for _ in range(self.n_versions)]
+        # optimistic init: assume full generation until measured otherwise
+        self.goodput = np.full(self.n_versions, float(self.max_new_tokens))
+        self._schedule = {at: evs for at, evs in event_schedule(self.scenario)
+                          if evs}
+        self._rng = np.random.default_rng(1_000_003 * self.seed + 17)
+        self._rid = 0
+
+    # -- the measured-utility callback (batched contract) -------------------
+    def measured_task_utility(self, lams: np.ndarray) -> np.ndarray:
+        """û over a [K, W] admission stack: quality-weighted goodput."""
+        return np.atleast_2d(np.asarray(lams)) @ (self.quality * self.goodput)
+
+    # -- one control interval ------------------------------------------------
+    def _pick_replica(self, weights: np.ndarray, version: int) -> int:
+        row = weights[version]
+        tot = row.sum()
+        if tot > 0:
+            return int(self._rng.choice(row.shape[0], p=row / tot))
+        # no dispatch mass yet (e.g. right after churn): any alive replica
+        dep = np.asarray(self.router.graph.deploy[version])
+        return int(self._rng.choice(np.nonzero(dep)[0]))
+
+    def _serve_interval(self) -> int:
+        split = self.router.admission_split()
+        weights = self.router.replica_weights()
+        versions = self._rng.choice(self.n_versions,
+                                    size=self.requests_per_interval, p=split)
+        admitted: list[Request] = []
+        for v in versions:
+            prompt = self._rng.integers(
+                0, self.cfg.vocab, self.prompt_len).astype(np.int32)
+            req = Request(self._rid, prompt,
+                          max_new_tokens=self.max_new_tokens,
+                          version=int(v),
+                          replica=self._pick_replica(weights, int(v)))
+            self._rid += 1
+            self.engines[int(v)].submit(req)
+            admitted.append(req)
+        tokens = 0
+        for _ in range(self.engine_steps_per_interval):
+            tokens += sum(e.step() for e in self.engines)
+        for w in range(self.n_versions):
+            mine = [len(r.output) for r in admitted if r.version == w]
+            if mine:
+                self.goodput[w] += self.goodput_ema * (np.mean(mine)
+                                                       - self.goodput[w])
+        return tokens
+
+    def run(self) -> SimReport:
+        u, lam_t, tok, fired = [], [], [], []
+        for t in range(self.scenario.horizon):
+            for ev in self._schedule.get(t, ()):
+                self.state = self.router.apply_scenario_event(self.state, ev)
+                fired.append((t, ev.kind))
+            tokens = self._serve_interval()
+            rec = self.router.control_step(self.measured_task_utility)
+            u.append(rec["utility"])
+            lam_t.append(rec["lam"])
+            tok.append(tokens)
+        return SimReport(utility=np.asarray(u), lam=np.asarray(lam_t),
+                         tokens=np.asarray(tok),
+                         goodput=self.goodput.copy(), events=fired,
+                         tokens_served=sum(e.tokens_served
+                                           for e in self.engines))

@@ -11,7 +11,9 @@ except ModuleNotFoundError:
     from hypothesis_stub import given, settings, st
 
 from repro.core import (allocation_kkt_residual, exact_gradient_allocation,
-                        get_cost, gs_oma, make_bank, omad, solve_jowr)
+                        get_cost, gs_oma, make_bank, omad, solve_jowr,
+                        total_cost)
+from repro.core.allocation import _project_box_simplex
 
 LAM_TOTAL = 60.0
 
@@ -78,6 +80,81 @@ def test_all_utility_families_converge(small_cec, kind):
     # converged: last-10 variation tiny relative to total improvement
     spread = u[-10:].max() - u[-10:].min()
     assert spread < 0.05 * max(abs(u[-1] - u[0]), 1.0) + 1e-3
+
+
+def test_utility_traj_reports_committed_iterate(small_cec):
+    """The recorded U_t is the paper's U(Λ^t, φ^t): the final trajectory
+    value must match an independent evaluation at (result.lam, result.phi)
+    — previously U_t was priced with the φ left over from the last
+    *perturbed* observation (Λ^t − δ·e_W)."""
+    cost = get_cost("exp")
+    bank = make_bank("log", 3, seed=3, lam_total=LAM_TOTAL)
+    res = gs_oma(small_cec, cost, bank, LAM_TOTAL, delta=0.5,
+                 eta_outer=0.05, eta_inner=3.0, outer_iters=12,
+                 inner_iters=5)
+    want = float(bank.total(res.lam)
+                 - total_cost(small_cec, cost, res.phi, res.lam))
+    np.testing.assert_allclose(float(res.utility_traj[-1]), want,
+                               rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# exact box-simplex projection (Alg. 1 line 9)
+# ---------------------------------------------------------------------------
+
+def _assert_projection_ok(y, lam_total, delta):
+    x = np.asarray(_project_box_simplex(jnp.asarray(y, jnp.float32),
+                                        lam_total, delta))
+    # Σλ_w = λ_total to 1e-6 (relative — float32 summation floor), bounds
+    # respected; the old rescale-then-clip broke the sum whenever a
+    # coordinate saturated a bound
+    np.testing.assert_allclose(x.sum(-1), lam_total, rtol=1e-6)
+    assert (x >= delta - 1e-5).all()
+    assert (x <= lam_total - delta + 1e-5).all()
+    return x
+
+
+def test_project_box_simplex_saturation_regression():
+    """The documented failure of the old composition: one coordinate far
+    above the box pins at λ−δ and the rescale leaves Σ ≠ λ."""
+    x = _assert_projection_ok([30.0, 0.1, 0.1], 10.0, 0.5)
+    np.testing.assert_allclose(x, [9.0, 0.5, 0.5], atol=1e-5)
+
+
+@pytest.mark.parametrize("seed", range(6))
+@pytest.mark.parametrize("W", [2, 3, 8, 64])
+def test_project_box_simplex_random_iterates(seed, W):
+    rng = np.random.default_rng(seed)
+    y = rng.uniform(-LAM_TOTAL, 2 * LAM_TOTAL, W)
+    x = _assert_projection_ok(y, LAM_TOTAL, 0.5)
+    # idempotent == fixed point on feasible inputs (x is feasible)
+    x2 = np.asarray(_project_box_simplex(jnp.asarray(x), LAM_TOTAL, 0.5))
+    np.testing.assert_allclose(x2, x, atol=1e-4)
+
+
+def test_project_box_simplex_batched_matches_rows():
+    """[B, W] stacks (the scenario engine's per-instance iterates) project
+    exactly like their rows."""
+    rng = np.random.default_rng(7)
+    Y = rng.uniform(-20.0, 80.0, (5, 4)).astype(np.float32)
+    got = np.asarray(_project_box_simplex(jnp.asarray(Y), LAM_TOTAL, 0.5))
+    want = np.stack([np.asarray(_project_box_simplex(jnp.asarray(r),
+                                                     LAM_TOTAL, 0.5))
+                     for r in Y])
+    np.testing.assert_allclose(got, want, atol=1e-5)
+
+
+@settings(max_examples=40, deadline=None)
+@given(seed=st.integers(0, 10_000), W=st.integers(2, 48),
+       lam_total=st.floats(4.0, 200.0), delta=st.floats(0.01, 0.08))
+def test_project_box_simplex_properties(seed, W, lam_total, delta):
+    """Property sweep: Σ exact (1e-6 rel), bounds, idempotency — for any
+    feasible (λ, δ) pair and arbitrary random iterates."""
+    rng = np.random.default_rng(seed)
+    y = rng.uniform(-2.0 * lam_total, 3.0 * lam_total, W)
+    x = _assert_projection_ok(y, lam_total, delta)
+    x2 = np.asarray(_project_box_simplex(jnp.asarray(x), lam_total, delta))
+    np.testing.assert_allclose(x2, x, atol=1e-3 * lam_total)
 
 
 @settings(max_examples=20, deadline=None)

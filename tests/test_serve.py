@@ -4,17 +4,31 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.configs import get_config
-from repro.core import build_random_cec
+from repro.core import build_random_cec, get_cost, total_cost
+from repro.core.routing import solve_routing
 from repro.models import model as M
-from repro.serve import CECRouter, InferenceEngine, Request
+from repro.serve import CECRouter, InferenceEngine, Request, ServingSim
 from repro.topo import connected_er
 
 
 def _cfg():
     return dataclasses.replace(get_config("smollm-135m", smoke=True),
                                dtype="float32")
+
+
+def _solo(cfg, params, prompt, new, max_len=64):
+    """Sequential single-request reference with a roomy cache window."""
+    lg, cache = M.prefill(cfg, params, {"tokens": jnp.asarray(prompt)[None]},
+                          max_len=max_len)
+    out = [int(jnp.argmax(lg[0]))]
+    for _ in range(new - 1):
+        lg, cache = M.decode_step(
+            cfg, params, jnp.asarray([[out[-1]]], jnp.int32), cache)
+        out.append(int(jnp.argmax(lg[0])))
+    return out
 
 
 def test_continuous_batching_matches_sequential():
@@ -61,6 +75,45 @@ def test_engine_serves_all_under_slot_pressure():
     eng.drain()
     assert all(r.done for r in reqs)
     assert eng.tokens_served >= 5 * 3
+
+
+def test_engine_max_len_boundary():
+    """Prompt + generation at/over the cache window: every decode write
+    must stay inside the grafted window (the old ``>=`` check let a
+    window-filling prompt's first decode write one slot past it) and the
+    truncated tokens must match a roomy-window reference — corruption from
+    an out-of-window write would diverge them."""
+    cfg = _cfg()
+    params = M.init(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(3)
+    L = 16
+    for S in (L - 3, L - 1, L):
+        prompt = rng.integers(0, cfg.vocab, S).astype(np.int32)
+        eng = InferenceEngine(cfg, params, max_batch=2, max_len=L)
+        req = Request(0, prompt, max_new_tokens=8)
+        eng.submit(req)
+        eng.drain()
+        # window capacity: prefill holds S entries and emits one token;
+        # each further token costs one cache write at index S+k
+        want_n = min(8, L - S + 1)
+        assert len(req.output) == want_n, (S, req.output)
+        assert req.output == _solo(cfg, params, prompt, want_n)
+
+
+def test_engine_rejects_oversized_prompt_and_caps_generation():
+    cfg = _cfg()
+    params = M.init(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(4)
+    eng = InferenceEngine(cfg, params, max_batch=2, max_len=12)
+    with pytest.raises(ValueError):
+        eng.submit(Request(0, rng.integers(0, cfg.vocab, 13).astype(np.int32)))
+    # max_new_tokens=1 is satisfied by the prefill token alone — the old
+    # admit path still scheduled a decode step and over-generated
+    req = Request(1, rng.integers(0, cfg.vocab, 4).astype(np.int32),
+                  max_new_tokens=1)
+    eng.submit(req)
+    eng.drain()
+    assert len(req.output) == 1
 
 
 def test_cec_router_dispatch_consistency():
@@ -134,3 +187,88 @@ def test_router_consumes_scenario_event_stream():
     alive_dep = np.asarray(router.graph.deploy)
     assert (w[~alive_dep.astype(bool)] == 0).all()
     np.testing.assert_allclose(w.sum(-1), 1.0, atol=1e-5)
+
+
+def test_control_step_parity_with_reference_loop():
+    """The fused device-resident step reproduces the per-observation host
+    loop (the pre-PR-3 router semantics, preserved verbatim as
+    ``benchmarks.bench_router._legacy_control_step`` — one reference, the
+    bench's speedup baseline and this parity oracle) within 1e-5."""
+    import pathlib
+    import sys
+    sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]))
+    from benchmarks.bench_router import _legacy_control_step
+
+    g = build_random_cec(connected_er(12, 0.35, seed=4), 3, 15.0, seed=1)
+    cost = get_cost("exp")
+    quality = np.array([1.0, 1.4, 1.8])
+    scalar_fn = lambda lam: float((quality * np.asarray(lam)).sum())
+
+    router = CECRouter(g, lam_total=12.0)
+    want_lam, phi = _legacy_control_step(
+        g, cost, jnp.asarray(router.lam), g.uniform_phi(), 12.0, scalar_fn,
+        delta=router.delta, eta_outer=router.eta_outer,
+        eta_inner=router.eta_inner)
+    # ... plus the committed observation the fused step appends
+    want_phi, _ = solve_routing(g, cost, want_lam, phi, router.eta_inner, 1)
+    want_cost = float(total_cost(g, cost, want_phi, want_lam))
+
+    rec = router.control_step(scalar_fn)
+    np.testing.assert_allclose(rec["lam"], np.asarray(want_lam),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(router.phi), np.asarray(want_phi),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(rec["cost"], want_cost, rtol=1e-5, atol=1e-5)
+
+
+def test_router_under_churn_recovers_utility():
+    """Live mirror of ``test_link_churn_recovers_pre_event_utility``: the
+    router consumes the named link_churn timeline mid-serving and the
+    measured network utility re-crosses 95% of its pre-event level within
+    the post-event budget (DESIGN.md §11)."""
+    from repro.core import event_schedule, initial_state, named_scenarios
+
+    sc = named_scenarios(horizon=40, n=12, p=0.35)["link_churn"]
+    state = initial_state(sc, seed=0)
+    bank = state.bank
+
+    def measured(lams):                       # batched bank observation
+        return np.asarray(jax.vmap(bank.total)(jnp.asarray(lams)))
+
+    router = CECRouter(state.graph(), lam_total=sc.lam_total)
+    schedule = {at: evs for at, evs in event_schedule(sc) if evs}
+    utilities = []
+    for t in range(sc.horizon):
+        for ev in schedule.get(t, ()):
+            state = router.apply_scenario_event(state, ev)
+        utilities.append(router.control_step(measured)["utility"])
+    u = np.asarray(utilities)
+    (t0,) = sc.event_times                    # the rewire boundary
+    pre = u[t0 - 5:t0].mean()
+    post = u[t0:]
+    recovered = post >= 0.95 * pre
+    assert recovered.any() and int(np.argmax(recovered)) <= 30
+    assert post[-1] >= 0.95 * pre             # and it holds at the end
+
+
+def test_serving_sim_end_to_end():
+    """Engine traffic + fused router + scenario events in one loop: the
+    serving counterpart of run_scenario (what is benchmarked is what
+    serves)."""
+    from repro.core import NodeFail, Scenario
+
+    cfg = _cfg()
+    params = M.init(cfg, jax.random.PRNGKey(0))
+    sc = Scenario("fleet", horizon=6, topo_kwargs={"n": 12, "p": 0.35},
+                  n_sessions=3, mean_capacity=20.0, lam_total=12.0,
+                  events=(NodeFail(at=3, count=1, seed=4),))
+    sim = ServingSim(sc, cfg=cfg, params=params, seed=0,
+                     requests_per_interval=4, engine_steps_per_interval=6,
+                     prompt_len=4, max_new_tokens=3, max_batch=2, max_len=24)
+    rep = sim.run()
+    assert rep.utility.shape == (6,) and np.isfinite(rep.utility).all()
+    assert rep.tokens_served > 0 and rep.tokens.sum() == rep.tokens_served
+    assert [k for _, k in rep.events] == ["NodeFail"]
+    # admission split stays feasible through the event
+    np.testing.assert_allclose(rep.lam.sum(-1), 12.0, rtol=1e-4)
+    assert (rep.goodput > 0).all()

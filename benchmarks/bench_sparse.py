@@ -1,0 +1,104 @@
+"""Dense-vs-sparse scaling: the CECGraphSparse representation win.
+
+For fleet-sized sparse topologies (``topo`` generators: grid / geometric /
+power-law at N ∈ {256, 1024, 4096}) this measures the OMD-RT control-plane
+iteration on both representations — per-iteration latency of the jitted
+``solve_routing`` scan and resident state bytes (graph + φ pytree leaves).
+The dense path is pinned via ``dispatch.sparse_dispatch(huge)`` so the
+auto-policy can't silently convert the baseline being measured.
+
+Smoke (CI) runs the headline case, power_law at N=1024, and asserts the
+PR-4 acceptance bar: ≥5× latency *or* ≥4× state-memory improvement for
+sparse over dense, plus trajectory agreement (the two representations must
+be computing the same iteration).  N=4096 runs sparse-only (the dense
+build alone would materialize ~800 MB of masks — the point of the PR).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (InfeasibleTopology, build_augmented,
+                        build_augmented_sparse, dispatch, get_cost,
+                        solve_routing)
+from repro.core.graph import random_deployment
+from repro.core.sparse import state_nbytes
+from repro.topo import make_fleet
+
+from . import common
+from .common import dump, emit, timeit
+
+LAM = jnp.array([20.0, 20.0, 20.0])
+W = 3
+DENSE_CAP = 2048          # beyond this the dense build is the bottleneck
+
+
+def _draw_fleet(adj: np.ndarray, n: int, seed: int, mean_cap: float = 10.0):
+    """Randomized capacities + deployment on a fleet adjacency (feasible)."""
+    for t in range(20):
+        rng = np.random.default_rng(seed + 1000 * t)
+        link = rng.uniform(0.05, 2.0, (n, n)).astype(np.float32) * mean_cap
+        link = np.maximum(link, link.T)
+        comp = (rng.uniform(0.5, 1.5, n) * mean_cap).astype(np.float32)
+        deploy = random_deployment(n, W, rng)
+        try:
+            return deploy, link, comp, build_augmented_sparse(
+                adj, deploy, link, comp)
+        except InfeasibleTopology:
+            continue
+    raise InfeasibleTopology(f"no feasible fleet draw at n={n}")
+
+
+def _time_routing(graph, phi0, iters: int):
+    cost = get_cost("exp")
+    fn = jax.jit(lambda p: solve_routing(graph, cost, LAM, p, 1.0, iters))
+    (_, traj), sec = timeit(fn, phi0)
+    return np.asarray(traj), sec / iters
+
+
+def main() -> list[dict]:
+    iters = common.scaled(10, 2)
+    cases = common.scaled(
+        [("grid_2d", 256), ("random_geometric", 256), ("power_law", 1024),
+         ("power_law", 4096)],
+        [("power_law", 1024)])
+
+    rows = []
+    for kind, n in cases:
+        adj = make_fleet(kind, n, seed=1)
+        deploy, link, comp, gs = _draw_fleet(adj, n, seed=0)
+        phi_s = gs.uniform_phi()
+        traj_s, t_s = _time_routing(gs, phi_s, iters)
+        mem_s = state_nbytes(gs, phi_s)
+        rec = {"kind": kind, "n": n, "n_edges": gs.n_edges,
+               "d_max": gs.d_max, "d_in_max": gs.d_in_max,
+               "depth_max": gs.depth_max, "density": gs.density,
+               "sparse_us_per_iter": t_s * 1e6,
+               "sparse_state_mb": mem_s / 1e6}
+        emit(f"sparse.{kind}_{n}.omd_iter_sparse", t_s,
+             f"E={gs.n_edges};d_max={gs.d_max};depth={gs.depth_max}")
+
+        if n <= DENSE_CAP:
+            gd = build_augmented(adj, deploy, link, comp)
+            phi_d = gd.uniform_phi()
+            with dispatch.sparse_dispatch(threshold=1 << 30):
+                traj_d, t_d = _time_routing(gd, phi_d, iters)
+            mem_d = state_nbytes(gd, phi_d)
+            rec.update(dense_us_per_iter=t_d * 1e6,
+                       dense_state_mb=mem_d / 1e6,
+                       latency_ratio=t_d / t_s, memory_ratio=mem_d / mem_s)
+            emit(f"sparse.{kind}_{n}.omd_iter_dense", t_d,
+                 f"lat_x={t_d / t_s:.1f};mem_x={mem_d / mem_s:.1f}")
+            np.testing.assert_allclose(traj_d, traj_s, rtol=1e-4, atol=1e-4)
+            if n >= 1024:            # PR-4 acceptance bar (smoke-asserted)
+                assert (rec["latency_ratio"] >= 5.0
+                        or rec["memory_ratio"] >= 4.0), rec
+        rows.append(rec)
+
+    dump("bench_sparse", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

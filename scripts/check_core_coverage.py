@@ -1,0 +1,66 @@
+"""Coverage floor gate for the control-plane core (CI bench-smoke job).
+
+Reads a ``coverage.json`` produced by ``pytest --cov=repro
+--cov-report=json``, prints a per-file summary for ``src/repro/core/``,
+and fails when the aggregate line coverage of that package drops below
+the recorded floor.
+
+The floor is the level recorded at PR 4 (the sparse-engine PR that
+introduced this gate) minus a small flake margin.  Policy: ratchet it
+*upward* as coverage grows; never lower it to make a PR pass — delete the
+untested code or test it.  Override for local experiments only:
+``REPRO_CORE_COV_MIN=<percent>``.
+
+Usage:  python scripts/check_core_coverage.py [coverage.json]
+"""
+from __future__ import annotations
+
+import json
+import os
+import pathlib
+import sys
+
+# Recorded at PR 4 (see module docstring); keep in sync with reality by
+# ratcheting, not lowering.
+CORE_FLOOR_PERCENT = 80.0
+
+CORE_MARKER = "repro/core/"
+
+
+def main(path: str = "coverage.json") -> int:
+    floor = float(os.environ.get("REPRO_CORE_COV_MIN", CORE_FLOOR_PERCENT))
+    data = json.loads(pathlib.Path(path).read_text())
+    rows = []
+    covered = statements = 0
+    for fname, info in sorted(data["files"].items()):
+        if CORE_MARKER not in fname.replace("\\", "/"):
+            continue
+        s = info["summary"]
+        covered += s["covered_lines"]
+        statements += s["num_statements"]
+        rows.append((fname, s["num_statements"], s["covered_lines"],
+                     s["percent_covered"]))
+    if not statements:
+        print(f"error: no files matching '{CORE_MARKER}' in {path}",
+              file=sys.stderr)
+        return 2
+
+    print(f"{'file':58s} {'stmts':>6s} {'cover':>6s} {'pct':>7s}")
+    for fname, n, c, pct in rows:
+        print(f"{fname:58s} {n:6d} {c:6d} {pct:6.1f}%")
+    total = 100.0 * covered / statements
+    print(f"{'TOTAL src/repro/core/':58s} {statements:6d} {covered:6d} "
+          f"{total:6.1f}%  (floor {floor:.1f}%)")
+
+    if total < floor:
+        print(f"FAIL: core coverage {total:.1f}% is below the recorded "
+              f"floor {floor:.1f}% — add tests (or, for a deliberate "
+              "removal of tested code, ratchet consciously in "
+              "scripts/check_core_coverage.py with a commit-message note)",
+              file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(*sys.argv[1:]))

@@ -1,0 +1,64 @@
+"""Regenerate the committed golden-trace fixture (tests/golden/).
+
+The fixture pins the Fig. 7 topology's ``gs_oma`` utility trajectory —
+the fused control step end to end: perturbation basis, oracle
+observations, mirror ascent, exact box-simplex projection, committed
+observation.  ``tests/test_golden_trace.py`` asserts every future run
+matches within tolerance, so numerical drift in the control plane is
+caught by tier-1 instead of by benchmark eyeballing.
+
+Regenerate ONLY when the control-step semantics change *intentionally*
+(and say so in the commit message):
+
+    PYTHONPATH=src python scripts/make_golden_trace.py
+"""
+from __future__ import annotations
+
+import os
+import pathlib
+
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import numpy as np
+
+GOLDEN = pathlib.Path(__file__).resolve().parents[1] / "tests" / "golden"
+
+# The pinned configuration — mirrored by tests/test_golden_trace.py.
+CONFIG = dict(n=25, p=0.2, adj_seed=1, instance_seed=0, n_sessions=3,
+              mean_capacity=10.0, bank_kind="log", bank_seed=0,
+              lam_total=60.0, method="nested", outer_iters=20,
+              inner_iters=10, delta=0.5, eta_outer=0.05, eta_inner=3.0)
+
+
+def solve(cfg=CONFIG):
+    from repro.core import build_random_cec, make_bank, solve_jowr
+    from repro.topo import connected_er
+
+    graph = build_random_cec(
+        connected_er(cfg["n"], cfg["p"], seed=cfg["adj_seed"]),
+        cfg["n_sessions"], cfg["mean_capacity"], seed=cfg["instance_seed"])
+    bank = make_bank(cfg["bank_kind"], cfg["n_sessions"],
+                     seed=cfg["bank_seed"], lam_total=cfg["lam_total"])
+    return solve_jowr(graph, bank, cfg["lam_total"], method=cfg["method"],
+                      outer_iters=cfg["outer_iters"],
+                      inner_iters=cfg["inner_iters"], delta=cfg["delta"],
+                      eta_outer=cfg["eta_outer"], eta_inner=cfg["eta_inner"])
+
+
+def main() -> pathlib.Path:
+    res = solve()
+    GOLDEN.mkdir(parents=True, exist_ok=True)
+    path = GOLDEN / "fig7_gs_oma_traj.npz"
+    np.savez(path,
+             utility_traj=np.asarray(res.utility_traj, np.float64),
+             lam=np.asarray(res.lam, np.float64),
+             **{f"cfg_{k}": v for k, v in CONFIG.items()
+                if not isinstance(v, str)},
+             cfg_method=CONFIG["method"], cfg_bank_kind=CONFIG["bank_kind"])
+    print(f"wrote {path}: final U = {float(res.utility_traj[-1]):.6f}, "
+          f"lam = {np.asarray(res.lam)}")
+    return path
+
+
+if __name__ == "__main__":
+    main()

@@ -3,12 +3,15 @@ from . import dispatch
 from .allocation import (ControlStep, JOWRResult, allocation_kkt_residual,
                          control_step, fused_control_step, gs_oma,
                          perturbed_allocations)
-from .batch import (CECGraphBatch, pad_graph, solve_jowr_batch,
-                    solve_routing_batch, stack_banks)
+from .batch import (CECGraphBatch, CECGraphSparseBatch, pad_graph,
+                    pad_sparse_graph, solve_jowr_batch, solve_routing_batch,
+                    stack_banks)
 from .costs import CostFn, get as get_cost
 from .flow import cost_and_state, link_flows, propagate, total_cost
-from .graph import (CECGraph, InfeasibleTopology, InstanceDraw,
-                    build_augmented, build_random_cec, draw_instance)
+from .graph import (CECGraph, CECGraphSparse, InfeasibleTopology,
+                    InstanceDraw, SparsePhi, build_augmented,
+                    build_augmented_sparse, build_random_cec, draw_instance,
+                    sparsify)
 from .jowr import solve_jowr
 from .marginal import marginals, phi_gradient
 from .opt_baseline import exact_gradient_allocation, frank_wolfe_routing
@@ -36,6 +39,8 @@ __all__ = [
     "solve_routing_sgp", "warm_start_phi", "omad", "UtilityBank", "make_bank",
     "CECGraphBatch", "pad_graph", "solve_jowr_batch", "solve_routing_batch",
     "stack_banks", "dispatch",
+    "CECGraphSparse", "CECGraphSparseBatch", "SparsePhi",
+    "build_augmented_sparse", "pad_sparse_graph", "sparsify",
     "Event", "Rewire", "NodeFail", "NodeJoin", "CapacityScale", "BankSwap",
     "DemandShift", "Scenario", "ScenarioState", "ScenarioResult",
     "apply_event", "initial_state", "compile_segments", "event_schedule",

@@ -217,10 +217,27 @@ def gs_oma(
     phi0: Array | None = None,
     lam0: Array | None = None,
 ) -> JOWRResult:
-    """Nested-loop solver (Alg. 1); ``inner_iters=1`` gives OMAD (Alg. 3)."""
+    """Nested-loop solver (Alg. 1); ``inner_iters=1`` gives OMAD (Alg. 3).
+
+    A dense graph past the ``dispatch.use_sparse`` (N, density) policy is
+    converted to the edge-list representation before tracing, so the whole
+    outer×inner scan runs in O(E); the returned ``JOWRResult.phi`` is
+    converted back to the dense layout, keeping the public contract
+    representation-independent.  Passing a ``CECGraphSparse`` directly
+    (as ``CECRouter`` does) skips both conversions and yields a
+    ``SparsePhi``.
+    """
+    dense_in = graph
+    graph = dispatch.maybe_sparsify(graph, phi0, lam0)
+    converted = graph is not dense_in
     W = graph.n_sessions
     lam0 = jnp.full((W,), lam_total / W) if lam0 is None else lam0
-    phi0 = graph.uniform_phi() if phi0 is None else phi0
+    if phi0 is None:
+        phi0 = graph.uniform_phi()
+    elif converted:
+        from . import sparse as _sparse
+
+        phi0 = _sparse.phi_to_sparse(graph, phi0)
 
     def outer(carry, _):
         lam, phi = carry
@@ -237,6 +254,10 @@ def gs_oma(
 
     (lam, phi), (u_traj, lam_traj) = jax.lax.scan(
         outer, (lam0, phi0), None, length=outer_iters)
+    if converted:
+        from . import sparse as _sparse
+
+        phi = _sparse.phi_to_dense(graph, phi)
     return JOWRResult(lam=lam, phi=phi, utility_traj=u_traj, lam_traj=lam_traj)
 
 

@@ -28,7 +28,7 @@ import numpy as np
 
 from . import costs as _costs
 from .allocation import JOWRResult
-from .graph import CECGraph
+from .graph import CECGraph, CECGraphSparse
 from .jowr import Method, solve_jowr
 from .routing import solve_routing, solve_routing_sgp
 from .utility import UtilityBank
@@ -158,6 +158,182 @@ class CECGraphBatch:
         return self.stacked_graph().uniform_phi()
 
 
+def pad_sparse_graph(graph: CECGraphSparse, n_phys: int,
+                     depth_max: int | None = None, d_max: int | None = None,
+                     d_src: int | None = None,
+                     d_in_max: int | None = None) -> CECGraphSparse:
+    """Embed a sparse graph into a larger index/slot space.
+
+    The edge-list counterpart of :func:`pad_graph`: physical nodes keep
+    their indices, pad nodes are isolated, the virtual source and sinks
+    relocate to the tail positions, and every slot axis grows to the
+    requested width (slots keep their positions — crucial for ``in_slot``
+    validity).  Node indices stored in ``nbr``/``src_nbr`` are remapped
+    through the same relocation.  Solve-equivalent by the same argument as
+    the dense pad (extra rows/slots carry zero mask).
+    """
+    if n_phys < graph.n_phys:
+        raise ValueError(f"cannot shrink graph: {graph.n_phys} -> {n_phys}")
+    depth_max = max(graph.depth_max, depth_max or 0)
+    d_max = max(graph.d_max, d_max or 0)
+    d_src = max(graph.d_src, d_src or 0)
+    d_in_max = max(graph.d_in_max, d_in_max or 0)
+    if (n_phys, depth_max, d_max, d_src, d_in_max) == (
+            graph.n_phys, graph.depth_max, graph.d_max, graph.d_src,
+            graph.d_in_max):
+        return graph
+
+    W = graph.n_sessions
+    n_bar = n_phys + 1 + W
+    shift = n_phys - graph.n_phys
+    idx = np.concatenate([np.arange(graph.n_phys), [n_phys],
+                          n_phys + 1 + np.arange(W)])
+
+    def remap(v):
+        v = np.asarray(v)
+        return np.where(v >= graph.src, v + shift, v).astype(np.int32)
+
+    nbr = np.tile(np.arange(n_bar, dtype=np.int32)[:, None], (1, d_max))
+    nbr[idx, : graph.d_max] = remap(graph.nbr)
+    out_mask = np.zeros((W, n_bar, d_max), np.float32)
+    out_mask[:, idx, : graph.d_max] = np.asarray(graph.out_mask)
+    edge_mask = np.zeros((n_bar, d_max), np.float32)
+    edge_mask[idx, : graph.d_max] = np.asarray(graph.edge_mask)
+    capacity = np.ones((n_bar, d_max), np.float32)
+    capacity[idx, : graph.d_max] = np.asarray(graph.capacity)
+    sink_slot = np.zeros(n_phys, np.int32)
+    sink_slot[: graph.n_phys] = np.asarray(graph.sink_slot)
+
+    src_nbr = np.full(d_src, n_phys, np.int32)
+    src_nbr[: graph.d_src] = remap(graph.src_nbr)
+    src_out_mask = np.zeros((W, d_src), np.float32)
+    src_out_mask[:, : graph.d_src] = np.asarray(graph.src_out_mask)
+    src_edge_mask = np.zeros(d_src, np.float32)
+    src_edge_mask[: graph.d_src] = np.asarray(graph.src_edge_mask)
+    src_capacity = np.ones(d_src, np.float32)
+    src_capacity[: graph.d_src] = np.asarray(graph.src_capacity)
+
+    in_src = np.zeros((n_bar, d_in_max), np.int32)
+    in_src[idx, : graph.d_in_max] = np.asarray(graph.in_src)
+    in_slot = np.zeros((n_bar, d_in_max), np.int32)
+    in_slot[idx, : graph.d_in_max] = np.asarray(graph.in_slot)
+    in_mask = np.zeros((n_bar, d_in_max), np.float32)
+    in_mask[idx, : graph.d_in_max] = np.asarray(graph.in_mask)
+
+    deploy = np.zeros((W, n_phys), bool)
+    deploy[:, : graph.n_phys] = np.asarray(graph.deploy)
+
+    return CECGraphSparse(
+        nbr=jnp.asarray(nbr), out_mask=jnp.asarray(out_mask),
+        edge_mask=jnp.asarray(edge_mask), capacity=jnp.asarray(capacity),
+        sink_slot=jnp.asarray(sink_slot),
+        src_nbr=jnp.asarray(src_nbr), src_out_mask=jnp.asarray(src_out_mask),
+        src_edge_mask=jnp.asarray(src_edge_mask),
+        src_capacity=jnp.asarray(src_capacity),
+        in_src=jnp.asarray(in_src), in_slot=jnp.asarray(in_slot),
+        in_mask=jnp.asarray(in_mask), deploy=jnp.asarray(deploy),
+        sinks=jnp.asarray(n_phys + 1 + np.arange(W)),
+        n_phys=n_phys, n_sessions=W, n_bar=n_bar, depth_max=depth_max,
+        src=n_phys, d_max=d_max, d_src=d_src, d_in_max=d_in_max,
+        n_edges=graph.n_edges)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class CECGraphSparseBatch:
+    """B sparse CEC instances stacked on a leading axis (cf.
+    :class:`CECGraphBatch`).
+
+    Instances are padded to common (``n_phys``, ``depth_max``, slot
+    widths) via :func:`pad_sparse_graph` and stacked leaf-wise;
+    ``solve_jowr_batch`` / ``solve_routing_batch`` accept either batch
+    flavor — the vmapped per-instance solver dispatches on the graph type.
+    """
+
+    # --- data (pytree leaves, leading axis = instance) ---
+    nbr: jax.Array
+    out_mask: jax.Array
+    edge_mask: jax.Array
+    capacity: jax.Array
+    sink_slot: jax.Array
+    src_nbr: jax.Array
+    src_out_mask: jax.Array
+    src_edge_mask: jax.Array
+    src_capacity: jax.Array
+    in_src: jax.Array
+    in_slot: jax.Array
+    in_mask: jax.Array
+    deploy: jax.Array
+    sinks: jax.Array
+    # --- static metadata (shared across instances) ---
+    n_instances: int = dataclasses.field(metadata=dict(static=True))
+    n_phys: int = dataclasses.field(metadata=dict(static=True))
+    n_sessions: int = dataclasses.field(metadata=dict(static=True))
+    n_bar: int = dataclasses.field(metadata=dict(static=True))
+    depth_max: int = dataclasses.field(metadata=dict(static=True))
+    src: int = dataclasses.field(metadata=dict(static=True))
+    d_max: int = dataclasses.field(metadata=dict(static=True))
+    d_src: int = dataclasses.field(metadata=dict(static=True))
+    d_in_max: int = dataclasses.field(metadata=dict(static=True))
+    n_edges: int = dataclasses.field(metadata=dict(static=True))
+
+    _LEAVES = ("nbr", "out_mask", "edge_mask", "capacity", "sink_slot",
+               "src_nbr", "src_out_mask", "src_edge_mask", "src_capacity",
+               "in_src", "in_slot", "in_mask", "deploy", "sinks")
+
+    @classmethod
+    def from_graphs(cls,
+                    graphs: Sequence[CECGraphSparse]) -> "CECGraphSparseBatch":
+        """Stack sparse instances, padding to the common slot widths."""
+        if not graphs:
+            raise ValueError("need at least one graph")
+        W = graphs[0].n_sessions
+        if any(g.n_sessions != W for g in graphs):
+            raise ValueError("all instances must share the session count W")
+        kw = dict(
+            n_phys=max(g.n_phys for g in graphs),
+            depth_max=max(g.depth_max for g in graphs),
+            d_max=max(g.d_max for g in graphs),
+            d_src=max(g.d_src for g in graphs),
+            d_in_max=max(g.d_in_max for g in graphs))
+        padded = [pad_sparse_graph(g, **kw) for g in graphs]
+        leaves = {name: jnp.stack([getattr(g, name) for g in padded])
+                  for name in cls._LEAVES}
+        return cls(**leaves, n_instances=len(padded), n_sessions=W,
+                   n_bar=padded[0].n_bar, src=padded[0].src,
+                   n_edges=max(g.n_edges for g in graphs), **kw)
+
+    def _graph(self, leaves, n_edges: int | None = None) -> CECGraphSparse:
+        return CECGraphSparse(
+            **dict(zip(self._LEAVES, leaves)),
+            n_phys=self.n_phys, n_sessions=self.n_sessions, n_bar=self.n_bar,
+            depth_max=self.depth_max, src=self.src, d_max=self.d_max,
+            d_src=self.d_src, d_in_max=self.d_in_max,
+            n_edges=self.n_edges if n_edges is None else n_edges)
+
+    def stacked_graph(self) -> CECGraphSparse:
+        """A ``CECGraphSparse`` view whose leaves carry the instance axis.
+
+        The shared ``n_edges`` metadata is the batch maximum (instances
+        differ; padding gives them one layout) — an upper bound, fine for
+        the solvers, which never read it.
+        """
+        return self._graph([getattr(self, name) for name in self._LEAVES])
+
+    def instance(self, b: int) -> CECGraphSparse:
+        """Materialize instance ``b`` as a standalone ``CECGraphSparse``
+        (with its *own* edge count recomputed from the masks, not the
+        batch-level upper bound — ``density`` stays truthful)."""
+        leaves = [getattr(self, name)[b] for name in self._LEAVES]
+        n_edges = int(np.asarray(self.edge_mask[b]).sum()
+                      + np.asarray(self.src_edge_mask[b]).sum())
+        return self._graph(leaves, n_edges=n_edges)
+
+    def uniform_phi(self):
+        """Stacked ``SparsePhi`` — uniform routing per instance."""
+        return self.stacked_graph().uniform_phi()
+
+
 def stack_banks(banks: Sequence[UtilityBank]) -> UtilityBank:
     """Stack per-instance utility banks (same family/noise) along axis 0."""
     kind, noise = banks[0].kind, banks[0].noise
@@ -174,7 +350,7 @@ def _bank_axis(bank: UtilityBank):
 
 
 def solve_jowr_batch(
-    batch: CECGraphBatch,
+    batch: CECGraphBatch | CECGraphSparseBatch,
     banks: UtilityBank | Sequence[UtilityBank],
     lam_total: float,
     *,
@@ -215,7 +391,7 @@ def solve_jowr_batch(
 
 
 def solve_routing_batch(
-    batch: CECGraphBatch,
+    batch: CECGraphBatch | CECGraphSparseBatch,
     cost: _costs.CostFn,
     lam: Array,
     phi0: Array,

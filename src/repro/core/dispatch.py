@@ -27,6 +27,14 @@ that was already jit-compiled keeps the branch it was traced with —
 ``kernel_dispatch`` / ``set_kernel_threshold`` only affect functions traced
 while the override is active, and are silent no-ops for cached traces.
 Trace (or re-jit) inside the override when you need the kernel path.
+
+A second, orthogonal axis is the **representation** (DESIGN.md §12): past
+:func:`use_sparse`'s (N, density) policy, :func:`maybe_sparsify` converts
+a dense ``CECGraph`` to the O(E) ``CECGraphSparse`` edge-list layout at
+the solver entry points (``solve_routing``, ``gs_oma``/``omad``,
+``CECRouter``).  Conversion is Python-level only — tracer inputs pass
+through untouched — and :func:`state_key` covers both axes so cached
+jitted control steps retrace under either override.
 """
 from __future__ import annotations
 
@@ -34,6 +42,7 @@ import contextlib
 import os
 
 import jax
+import numpy as np
 
 DEFAULT_THRESHOLD = int(os.environ.get("REPRO_KERNEL_NBAR_THRESHOLD", "256"))
 
@@ -41,6 +50,20 @@ _threshold = DEFAULT_THRESHOLD
 # Explicit configuration (env var / setter / context manager) opts in to the
 # interpret-mode kernel path off-TPU; by default kernels need real TPUs.
 _explicit = "REPRO_KERNEL_NBAR_THRESHOLD" in os.environ
+
+# Dense-vs-sparse representation policy (DESIGN.md §12.2): a graph whose
+# augmented node count clears REPRO_SPARSE_NBAR_THRESHOLD *and* whose union
+# edge density is at most REPRO_SPARSE_DENSITY_MAX is converted to the
+# edge-list representation by :func:`maybe_sparsify`.  Unlike the kernel
+# threshold there is no backend condition — the sparse jnp path beats the
+# dense einsums on every backend once the graph is big and sparse enough.
+SPARSE_DEFAULT_THRESHOLD = int(
+    os.environ.get("REPRO_SPARSE_NBAR_THRESHOLD", "512"))
+SPARSE_DEFAULT_DENSITY = float(
+    os.environ.get("REPRO_SPARSE_DENSITY_MAX", "0.15"))
+
+_sparse_threshold = SPARSE_DEFAULT_THRESHOLD
+_sparse_density = SPARSE_DEFAULT_DENSITY
 
 
 def kernel_threshold() -> int:
@@ -82,16 +105,89 @@ def kernel_dispatch(threshold: int):
         _threshold, _explicit = prev
 
 
-def state_key() -> tuple[int, bool]:
+def sparse_threshold() -> int:
+    """Augmented node count n̄ at which sparsification is considered."""
+    return _sparse_threshold
+
+
+def sparse_density_max() -> float:
+    """Union edge density |Ē|/n̄² at or below which sparsification engages."""
+    return _sparse_density
+
+
+def set_sparse_threshold(n: int | None, density_max: float | None = None):
+    """Set the sparse-representation policy; ``None`` n restores defaults."""
+    global _sparse_threshold, _sparse_density
+    if n is None:
+        _sparse_threshold = SPARSE_DEFAULT_THRESHOLD
+        _sparse_density = SPARSE_DEFAULT_DENSITY
+    else:
+        _sparse_threshold = int(n)
+        if density_max is not None:
+            _sparse_density = float(density_max)
+
+
+@contextlib.contextmanager
+def sparse_dispatch(threshold: int, density_max: float = 1.0):
+    """Temporarily force the sparse policy (tests/benchmarks).
+
+    ``with sparse_dispatch(1): ...`` sparsifies every dense graph reaching
+    :func:`maybe_sparsify` inside the block regardless of size or density.
+    Like ``kernel_dispatch`` this only affects *conversion points* entered
+    inside the block; already-converted or already-traced state keeps its
+    representation.
+    """
+    global _sparse_threshold, _sparse_density
+    prev = (_sparse_threshold, _sparse_density)
+    _sparse_threshold, _sparse_density = int(threshold), float(density_max)
+    try:
+        yield
+    finally:
+        _sparse_threshold, _sparse_density = prev
+
+
+def use_sparse(n_bar: int, density: float) -> bool:
+    """True when a graph of ``n_bar`` nodes / ``density`` should go sparse."""
+    return n_bar >= _sparse_threshold and density <= _sparse_density
+
+
+def maybe_sparsify(graph, *companions):
+    """Convert a dense ``CECGraph`` to ``CECGraphSparse`` past the policy.
+
+    The conversion builds numpy edge lists, so it only happens at the
+    Python level: if the graph's leaves or any ``companion`` array (e.g. a
+    caller's φ⁰ that would need re-layout) is a tracer, the graph is
+    returned unchanged — inside jit/vmap/scan the representation is
+    whatever the caller traced with.  Sparse graphs and sub-threshold
+    dense graphs pass through untouched.
+    """
+    from .graph import CECGraph, sparsify
+
+    if not isinstance(graph, CECGraph):
+        return graph
+    if graph.n_bar < _sparse_threshold:      # cheap static reject first —
+        return graph                         # no device→host mask transfer
+    if any(isinstance(x, jax.core.Tracer)
+           for x in (graph.edge_mask, *companions) if x is not None):
+        return graph
+    density = float(np.asarray(graph.edge_mask).sum()) / graph.n_bar ** 2
+    if not use_sparse(graph.n_bar, density):
+        return graph
+    return sparsify(graph)
+
+
+def state_key() -> tuple:
     """Hashable snapshot of the dispatch configuration.
 
     Callers that *cache jitted functions* (e.g. ``allocation.
     fused_control_step``) must key their cache on this so that tracing
     under ``kernel_dispatch``/``set_kernel_threshold`` gets a fresh trace
     instead of silently reusing a cached jnp-path executable (see the
-    module docstring's trace-time caveat).
+    module docstring's trace-time caveat).  Includes the sparse policy:
+    a router tracing under ``sparse_dispatch`` must not reuse a dense
+    trace.
     """
-    return (_threshold, _explicit)
+    return (_threshold, _explicit, _sparse_threshold, _sparse_density)
 
 
 def use_kernels(n_bar: int) -> bool:

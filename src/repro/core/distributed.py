@@ -21,6 +21,14 @@ physical network:
 Pallas kernels (flow_step / omd_update) are the per-shard compute bodies
 on real TPUs.  Tested on a fake 8-device mesh in tests/test_parallel.py
 and dry-run-compiled at N=4096 on the 16×16 production mesh.
+
+Sharding and sparsity are complementary scale axes: this module shards the
+*dense* [W, N, N] state across a mesh, while ``core/sparse.py`` shrinks
+the state itself to O(E) (``CECGraphSparse``, DESIGN.md §12) — the right
+tool for single-host fleet topologies whose density is ≪ 1.  The
+``dispatch.use_sparse`` policy picks the representation; a sharded sparse
+layout (edge-partitioned segments) is the natural composition once both
+axes are needed at once.
 """
 from __future__ import annotations
 

@@ -27,13 +27,23 @@ import jax.numpy as jnp
 
 from . import dispatch
 from .costs import CostFn
-from .graph import CECGraph
+from .graph import CECGraph, CECGraphSparse
 
 Array = jnp.ndarray
 
 
-def propagate(graph: CECGraph, phi: Array, lam: Array) -> Array:
-    """Session rates t[W, Nb] induced by routing φ and allocation Λ."""
+def propagate(graph: CECGraph | CECGraphSparse, phi, lam: Array) -> Array:
+    """Session rates t[W, Nb] induced by routing φ and allocation Λ.
+
+    Accepts either representation: a dense ``CECGraph`` with φ
+    ``[W, Nb, Nb]``, or a ``CECGraphSparse`` with a ``SparsePhi`` — the
+    sparse branch (core/sparse.py) runs the same Jacobi recursion over
+    padded edge lists in O(E) per step.
+    """
+    if isinstance(graph, CECGraphSparse):
+        from . import sparse
+
+        return sparse.propagate(graph, phi, lam)
     inject = graph.injection(lam)
 
     if dispatch.use_kernels(graph.n_bar):
@@ -51,20 +61,38 @@ def propagate(graph: CECGraph, phi: Array, lam: Array) -> Array:
     return t
 
 
-def link_flows(graph: CECGraph, phi: Array, t: Array) -> Array:
-    """Total flow per augmented link: F_ij = Σ_w t_i(w)·φ_ij(w) (eq. (4))."""
+def link_flows(graph: CECGraph | CECGraphSparse, phi, t: Array):
+    """Total flow per augmented link: F_ij = Σ_w t_i(w)·φ_ij(w) (eq. (4)).
+
+    Dense graphs return [Nb, Nb]; sparse graphs return the flows in the
+    slot layout (a ``SparsePhi``-shaped container).
+    """
+    if isinstance(graph, CECGraphSparse):
+        from . import sparse
+
+        return sparse.link_flow_slots(graph, phi, t)
     return jnp.einsum("wi,wij->ij", t, phi)
 
 
-def total_cost(graph: CECGraph, cost: CostFn, phi: Array, lam: Array) -> Array:
+def total_cost(graph: CECGraph | CECGraphSparse, cost: CostFn, phi,
+               lam: Array) -> Array:
     """Σ_{(i,j)∈Ē} D_ij(F_ij, C_ij): communication + computation cost."""
+    if isinstance(graph, CECGraphSparse):
+        from . import sparse
+
+        return sparse.total_cost(graph, cost, phi, lam)
     t = propagate(graph, phi, lam)
     F = link_flows(graph, phi, t)
     return jnp.sum(graph.edge_mask * cost.value(F, graph.capacity))
 
 
-def cost_and_state(graph: CECGraph, cost: CostFn, phi: Array, lam: Array):
+def cost_and_state(graph: CECGraph | CECGraphSparse, cost: CostFn, phi,
+                   lam: Array):
     """(total cost, t, F) in one pass — used by the routing iteration."""
+    if isinstance(graph, CECGraphSparse):
+        from . import sparse
+
+        return sparse.cost_and_state(graph, cost, phi, lam)
     t = propagate(graph, phi, lam)
     F = link_flows(graph, phi, t)
     D = jnp.sum(graph.edge_mask * cost.value(F, graph.capacity))

@@ -22,18 +22,26 @@ import jax
 import jax.numpy as jnp
 
 from .costs import CostFn
-from .graph import CECGraph
+from .graph import CECGraph, CECGraphSparse
 
 Array = jnp.ndarray
 
 
-def marginals(graph: CECGraph, cost: CostFn, phi: Array, t: Array,
-              F: Array) -> tuple[Array, Array]:
+def marginals(graph: CECGraph | CECGraphSparse, cost: CostFn, phi, t: Array,
+              F) -> tuple:
     """Returns (delta, dDdr).
 
     delta[w,i,j] = D'_ij + ∂D/∂r_j(w)  — marginal routing cost (eq. 19)
     dDdr[w,i]    = ∂D/∂r_i(w)          — broadcast scalar    (eq. 21)
+
+    Sparse graphs take the edge-list recursion (core/sparse.py): φ, F and
+    the returned delta are then in the slot layout; dDdr is [W, Nb] in
+    both representations.
     """
+    if isinstance(graph, CECGraphSparse):
+        from . import sparse
+
+        return sparse.marginals(graph, cost, phi, t, F)
     Dp = graph.edge_mask * cost.deriv(F, graph.capacity)   # [Nb, Nb]
     mask = graph.out_mask
 

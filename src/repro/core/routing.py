@@ -34,7 +34,7 @@ import jax.numpy as jnp
 from . import dispatch
 from .costs import CostFn
 from .flow import cost_and_state, total_cost
-from .graph import CECGraph
+from .graph import CECGraph, CECGraphSparse, SparsePhi
 from .marginal import marginals
 
 Array = jnp.ndarray
@@ -42,15 +42,24 @@ _NEG = -1e30
 
 
 class RoutingState(NamedTuple):
-    phi: Array      # [W, Nb, Nb]
+    phi: Array      # [W, Nb, Nb] dense, or a SparsePhi slot field
     cost: Array     # scalar — total network cost at phi
 
 
-def omd_step(graph: CECGraph, cost: CostFn, phi: Array, lam: Array,
+def omd_step(graph: CECGraph | CECGraphSparse, cost: CostFn, phi, lam: Array,
              eta: float) -> RoutingState:
-    """One OMD-RT iteration (Alg. 2 lines 3–6). Returns (new φ, cost at φ)."""
+    """One OMD-RT iteration (Alg. 2 lines 3–6). Returns (new φ, cost at φ).
+
+    Type-dispatched: a ``CECGraphSparse`` with a ``SparsePhi`` runs the
+    identical update over edge slots (core/sparse.py), kernel-dispatched
+    through ``omd_update_sparse`` past the size threshold.
+    """
     D, t, F = cost_and_state(graph, cost, phi, lam)
     delta, _ = marginals(graph, cost, phi, t, F)
+    if isinstance(graph, CECGraphSparse):
+        from . import sparse
+
+        return RoutingState(sparse.omd_phi_update(graph, phi, delta, eta), D)
     mask = graph.out_mask
     if dispatch.use_kernels(graph.n_bar):
         from repro.kernels.ops import omd_update_op
@@ -58,12 +67,9 @@ def omd_step(graph: CECGraph, cost: CostFn, phi: Array, lam: Array,
         new_phi = omd_update_op(phi, delta, mask, float(eta),
                                 interpret=dispatch.kernel_interpret())
         return RoutingState(new_phi, D)
-    logits = jnp.where(mask > 0, -eta * delta, _NEG)
-    logits = logits - jnp.max(logits, axis=-1, keepdims=True)
-    w = phi * jnp.exp(logits) * mask
-    rowsum = w.sum(-1, keepdims=True)
-    new_phi = jnp.where(rowsum > 0, w / jnp.where(rowsum > 0, rowsum, 1.0), phi)
-    return RoutingState(new_phi, D)
+    from .sparse import eg_update      # the one jnp definition of eq. (22)
+
+    return RoutingState(eg_update(phi, delta, mask, eta), D)
 
 
 def warm_start_phi(phi: Array, out_mask: Array, explore: float = 0.1) -> Array:
@@ -88,12 +94,26 @@ def warm_start_phi(phi: Array, out_mask: Array, explore: float = 0.1) -> Array:
     return jnp.where(s > 0, mixed / jnp.where(s > 0, s, 1.0), uniform)
 
 
-def solve_routing(graph: CECGraph, cost: CostFn, lam: Array, phi0: Array,
-                  eta: float, n_iters: int) -> tuple[Array, Array]:
+def solve_routing(graph: CECGraph | CECGraphSparse, cost: CostFn, lam: Array,
+                  phi0, eta: float, n_iters: int) -> tuple[Array, Array]:
     """Run OMD-RT for ``n_iters`` (the oracle 𝔒 of Assumption 4).
 
-    Returns (φ_final, per-iteration cost trajectory).
+    Returns (φ_final, per-iteration cost trajectory).  A dense graph past
+    the ``dispatch.use_sparse`` (N, density) threshold is converted to the
+    edge-list representation up front (concrete inputs only — tracers flow
+    through untouched) and φ is converted both ways, so callers keep the
+    dense [W, Nb, Nb] contract while the iteration itself runs in O(E).
+    Passing a ``CECGraphSparse`` (with a matching ``SparsePhi``) runs
+    sparse natively and returns the ``SparsePhi``.
     """
+    sgraph = dispatch.maybe_sparsify(graph, phi0)
+    if sgraph is not graph:
+        from . import sparse
+
+        phi, traj = solve_routing(sgraph, cost, lam,
+                                  sparse.phi_to_sparse(sgraph, phi0),
+                                  eta, n_iters)
+        return sparse.phi_to_dense(sgraph, phi), traj
 
     def step(phi, _):
         st = omd_step(graph, cost, phi, lam, eta)
@@ -142,7 +162,13 @@ def sgp_step(graph: CECGraph, cost: CostFn, phi: Array, lam: Array,
     Scaling matrix M = diag(t_i·h + ε) with h an upper bound on the row
     Hessian diagonal (second-derivative scaling of [39]); the update solves
     min ⟨∇, v−φ⟩ + 1/(2η)·(v−φ)ᵀM(v−φ) on the masked simplex.
+
+    Dense-only: SGP is the paper's comparison baseline, evaluated at paper
+    scale — the production path (OMD-RT) is what the sparse representation
+    serves.
     """
+    if isinstance(graph, CECGraphSparse):
+        raise TypeError("sgp_step is dense-only; use OMD-RT on sparse graphs")
     D, t, F = cost_and_state(graph, cost, phi, lam)
     delta, _ = marginals(graph, cost, phi, t, F)
     grad = t[:, :, None] * delta                            # eq. (18)
@@ -165,7 +191,8 @@ def solve_routing_sgp(graph: CECGraph, cost: CostFn, lam: Array, phi0: Array,
     return phi, traj
 
 
-def kkt_residual(graph: CECGraph, cost: CostFn, phi: Array, lam: Array) -> Array:
+def kkt_residual(graph: CECGraph | CECGraphSparse, cost: CostFn, phi,
+                 lam: Array) -> Array:
     """Theorem 3 optimality residual.
 
     At φ*, for every row with t_i(w) > 0 the marginal costs δφ_ij(w) on
@@ -173,6 +200,10 @@ def kkt_residual(graph: CECGraph, cost: CostFn, phi: Array, lam: Array) -> Array
     Returns the max over rows of (max support-δ − min allowed-δ), clipped
     at 0 — zero iff the KKT conditions hold.
     """
+    if isinstance(graph, CECGraphSparse):
+        from . import sparse
+
+        return sparse.kkt_residual(graph, cost, phi, lam)
     D, t, F = cost_and_state(graph, cost, phi, lam)
     delta, _ = marginals(graph, cost, phi, t, F)
     mask = graph.out_mask

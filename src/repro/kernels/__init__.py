@@ -1,8 +1,11 @@
-"""Pallas TPU kernels: flash attention, OMD routing update, flow step.
+"""Pallas TPU kernels: flash attention, OMD routing update, flow step —
+dense and sparse (segment/edge-list) variants.
 
 Each kernel has a jnp oracle in ref.py and a padded jit wrapper in ops.py;
 validated in interpret mode (tests/test_kernels.py)."""
 from . import ref
-from .ops import flash_attention_op, flow_step_op, omd_update_op
+from .ops import (flash_attention_op, flow_step_op, flow_step_sparse_op,
+                  omd_update_op, omd_update_sparse_op)
 
-__all__ = ["ref", "flash_attention_op", "flow_step_op", "omd_update_op"]
+__all__ = ["ref", "flash_attention_op", "flow_step_op",
+           "flow_step_sparse_op", "omd_update_op", "omd_update_sparse_op"]

@@ -1,0 +1,63 @@
+"""Pallas segment kernel: one sparse flow-propagation relaxation step.
+
+The edge-list counterpart of ``flow_step``: instead of a [W, N, N] mat-vec,
+each output node j accumulates its padded in-edge segment
+
+    t'[w, j] = base[w, j] + Σ_d t[w, in_src[j, d]] · φ[w, in_src[j, d],
+                                                       in_slot[j, d]]
+
+— a gather + masked row reduction, O(E) work per step.  ``base`` is the
+precomputed constant inflow (exogenous injection + the virtual source's
+admission flow, ``core.sparse.source_inflow``); the W virtual-sink entries
+are overlaid by the caller from the analytic compute-edge reduction, so no
+hub row ever enters the padded in-lists (DESIGN.md §12.1).
+
+Per grid step (one session) the full t row and φ slot table sit in VMEM —
+at the design sizes (N ≤ 16k, d_max ≤ 128 post-padding) both fit with room
+to spare — and the two gathers are lane gathers from VMEM-resident
+operands.  Dispatched by ``core.sparse.propagate`` when
+``dispatch.use_kernels(n_bar)`` holds, through ``kernels.ops.
+flow_step_sparse_op`` which pads nodes/slots to the 128-lane constraint
+asserted below; off-TPU the dispatch passes ``interpret=True`` (the only
+mode exercised in CI — on-TPU compilation additionally relies on Mosaic's
+dynamic-gather lowering, like every gather-based TPU kernel).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _flow_sparse_kernel(t_ref, rows_ref, base_ref, src_ref, slot_ref,
+                        mask_ref, o_ref):
+    t = t_ref[0]                                   # [N]
+    rows = rows_ref[0]                             # [N, D]
+    src = src_ref[...]                             # [N, Din] int32
+    eid = src * rows.shape[-1] + slot_ref[...]     # flattened slot id
+    vals = jnp.take(t, src) * jnp.take(rows.reshape(-1), eid)
+    o_ref[0] = base_ref[0] + (vals * mask_ref[...]).sum(-1)
+
+
+def flow_step_sparse(t, rows, base, in_src, in_slot, in_mask, *,
+                     interpret: bool = False):
+    """t, base [W, N]; rows [W, N, D]; in_* [N, Din] → [W, N].
+
+    N multiple of 128; D, Din multiples of 128 (``ops.py`` pads).  Padded
+    in-slots carry mask 0 and point at (0, 0); padded rows are all-zero.
+    """
+    W, N = t.shape
+    D, Din = rows.shape[-1], in_src.shape[-1]
+    assert N % 128 == 0 and D % 128 == 0 and Din % 128 == 0
+    node = pl.BlockSpec((1, N), lambda w: (w, 0))
+    inlist = pl.BlockSpec((N, Din), lambda w: (0, 0))
+    return pl.pallas_call(
+        _flow_sparse_kernel,
+        grid=(W,),
+        in_specs=[node,
+                  pl.BlockSpec((1, N, D), lambda w: (w, 0, 0)),
+                  node, inlist, inlist, inlist],
+        out_specs=node,
+        out_shape=jax.ShapeDtypeStruct((W, N), t.dtype),
+        interpret=interpret,
+    )(t, rows, base, in_src, in_slot, in_mask)

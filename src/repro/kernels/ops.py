@@ -21,8 +21,10 @@ import jax.numpy as jnp
 from . import ref
 from .flash_attention import flash_attention
 from .flow_step import flow_step
+from .flow_step_sparse import flow_step_sparse
 from .mamba_scan import mamba_scan
 from .omd_update import omd_update
+from .omd_update_sparse import omd_update_sparse
 
 
 def _pad_to(x, axis: int, mult: int, value=0.0):
@@ -71,6 +73,38 @@ def omd_update_op(phi, delta, mask, eta, interpret=True):
 
 
 @partial(jax.jit, static_argnames=("interpret",))
+def flow_step_sparse_op(t, rows, base, in_src, in_slot, in_mask,
+                        interpret=True):
+    """Padded/sliced sparse relaxation step (see flow_step_sparse.py).
+
+    Pads the node axis to 128 and both slot axes (d_max, d_in_max) to 128.
+    Slot ids stay valid under padding because ``in_slot`` indexes within
+    its row (the kernel flattens with the *padded* slot stride); padded
+    in-entries carry mask 0 and point at (0, 0).
+    """
+    N = t.shape[1]
+    tp = _pad_to(t, 1, 128)
+    bp = _pad_to(base, 1, 128)
+    rp = _pad_to(_pad_to(rows, 1, 128), 2, 128)
+    sp = _pad_to(_pad_to(in_src, 0, 128), 1, 128)
+    slp = _pad_to(_pad_to(in_slot, 0, 128), 1, 128)
+    mp = _pad_to(_pad_to(in_mask, 0, 128), 1, 128)
+    return flow_step_sparse(tp, rp, bp, sp, slp, mp,
+                            interpret=interpret)[:, :N]
+
+
+@partial(jax.jit, static_argnames=("eta", "interpret"))
+def omd_update_sparse_op(phi, delta, mask, eta, interpret=True):
+    """Padded/sliced sparse EG update over [W, R, C] edge-slot rows."""
+    R, C = phi.shape[1], phi.shape[2]
+    pp = _pad_to(_pad_to(phi, 1, 128), 2, 128)
+    dp = _pad_to(_pad_to(delta, 1, 128), 2, 128)
+    mp = _pad_to(_pad_to(mask, 1, 128), 2, 128)
+    out = omd_update_sparse(pp, dp, mp, eta, interpret=interpret)
+    return out[:, :R, :C]
+
+
+@partial(jax.jit, static_argnames=("interpret",))
 def mamba_scan_op(u, dt, A, Bm, Cm, interpret=True):
     """Padded chunkwise SSM scan; pads di→128-multiple, S→chunk multiple."""
     B, S, di = u.shape
@@ -84,5 +118,5 @@ def mamba_scan_op(u, dt, A, Bm, Cm, interpret=True):
     return out[:, :S, :di]
 
 
-__all__ = ["flash_attention_op", "flow_step_op", "mamba_scan_op",
-           "omd_update_op", "ref"]
+__all__ = ["flash_attention_op", "flow_step_op", "flow_step_sparse_op",
+           "mamba_scan_op", "omd_update_op", "omd_update_sparse_op", "ref"]

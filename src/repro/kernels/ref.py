@@ -30,6 +30,29 @@ def omd_update_ref(phi: Array, delta: Array, mask: Array, eta: float) -> Array:
     return jnp.where(s > 0, w / jnp.where(s > 0, s, 1.0), phi)
 
 
+def flow_step_sparse_ref(t: Array, rows: Array, base: Array, in_src: Array,
+                         in_slot: Array, in_mask: Array) -> Array:
+    """Sparse relaxation step: gather + masked in-segment sum.
+
+    t, base [W, N]; rows (φ slots) [W, N, D]; in_src/in_slot/in_mask
+    [N, Din].  Returns base + Σ_d t[:, in_src]·rows[:, in_src, in_slot]
+    — the relay half of ``core.sparse.propagate``'s step (virtual-sink
+    entries are overlaid by the caller).
+    """
+    vals = t[:, in_src] * rows[:, in_src, in_slot]
+    return base + (vals * in_mask).sum(-1)
+
+
+def omd_update_sparse_ref(phi: Array, delta: Array, mask: Array,
+                          eta: float) -> Array:
+    """Exponentiated-gradient update over [W, R, C] edge-slot rows.
+
+    Same contract as :func:`omd_update_ref` — the row update is
+    representation-agnostic; only the trailing-axis meaning differs.
+    """
+    return omd_update_ref(phi, delta, mask, eta)
+
+
 def mha_ref(q: Array, k: Array, v: Array, causal: bool = True,
             q_offset: int = 0, kv_len: int | None = None) -> Array:
     """Dense GQA attention. q [B,H,S,hd]; k,v [B,KH,T,hd] → [B,H,S,hd]."""

@@ -41,9 +41,10 @@ import dataclasses
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import CECGraph, propagate
+from repro.core import CECGraph, CECGraphSparse, SparsePhi, propagate
 from repro.core.allocation import (_project_box_simplex, fused_control_step,
                                    perturbed_allocations)
+from repro.core.dispatch import maybe_sparsify
 from repro.core.routing import warm_start_phi
 from repro.core.scenario import (DemandShift, Event, ScenarioState,
                                  apply_event)
@@ -80,6 +81,10 @@ class CECRouter:
     cost_name: str = "exp"
 
     def __post_init__(self):
+        # fleet-scale graphs flip to the edge-list representation here and
+        # stay there: the fused control step then traces and serves in
+        # O(E), with φ device-resident as a SparsePhi (DESIGN.md §12)
+        self.graph = maybe_sparsify(self.graph)
         W = self.graph.n_sessions
         # strong dtype: a weak-typed seed would retrace the fused step once
         # its first output (strong float32) replaces it
@@ -136,13 +141,38 @@ class CECRouter:
         return shares / np.where(tot > 0, tot, 1.0)
 
     # -- fault tolerance: node churn -----------------------------------------
-    def on_topology_change(self, new_graph: CECGraph, explore: float = 0.1):
+    def on_topology_change(self, new_graph: CECGraph | CECGraphSparse,
+                           explore: float = 0.1):
         """Re-target the running iterates onto a new graph (node fail/join).
 
         φ restarts from an exploration mix so edges that multiplicative
-        updates had zeroed can be rediscovered (DESIGN.md §5, §10)."""
+        updates had zeroed can be rediscovered (DESIGN.md §5, §10).  The
+        new graph goes through the same representation policy as the
+        constructor.  On the sparse path the running ``SparsePhi`` is
+        first re-expressed on the new slot layout by **edge identity**
+        (``core.sparse.remap_phi`` — churn can repack CSR slots even at
+        unchanged widths, so positional reuse would scramble edges), then
+        warm-started part-wise through the same ``warm_start_phi`` row
+        math as the dense tensor."""
+        old_graph = self.graph
+        new_graph = maybe_sparsify(new_graph)
         self.graph = new_graph
-        if self.phi.shape == new_graph.out_mask.shape:
+        if isinstance(new_graph, CECGraphSparse):
+            if (isinstance(self.phi, SparsePhi)
+                    and isinstance(old_graph, CECGraphSparse)
+                    and old_graph.n_bar == new_graph.n_bar):
+                from repro.core.sparse import remap_phi
+
+                phi = remap_phi(old_graph, new_graph, self.phi)
+                self.phi = SparsePhi(
+                    rows=warm_start_phi(phi.rows, new_graph.out_mask,
+                                        explore),
+                    src=warm_start_phi(phi.src, new_graph.src_out_mask,
+                                       explore))
+            else:
+                self.phi = new_graph.uniform_phi()
+        elif (not isinstance(self.phi, SparsePhi)
+                and self.phi.shape == new_graph.out_mask.shape):
             self.phi = warm_start_phi(self.phi, new_graph.out_mask, explore)
         else:
             self.phi = new_graph.uniform_phi()

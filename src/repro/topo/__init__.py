@@ -1,7 +1,9 @@
 from .churn import ChurnError, add_links, drop_links, rewire_links
-from .topologies import (abilene, balanced_tree, connected_er, fog, geant,
-                         make_topology)
+from .topologies import (FLEET_KINDS, abilene, balanced_tree, connected_er,
+                         fog, geant, grid_2d, make_fleet, make_topology,
+                         power_law, random_geometric)
 
 __all__ = ["abilene", "balanced_tree", "connected_er", "fog", "geant",
            "make_topology", "ChurnError", "add_links", "drop_links",
-           "rewire_links"]
+           "rewire_links", "FLEET_KINDS", "grid_2d", "make_fleet",
+           "power_law", "random_geometric"]

@@ -85,6 +85,79 @@ def geant() -> np.ndarray:
     return _from_edges(22, edges)
 
 
+# ---------------------------------------------------------------------------
+# fleet-scale sparse generators (beyond-paper: N ∈ {256, 1024, 4096}, the
+# CECGraphSparse regime — degree ≪ N, see DESIGN.md §12)
+# ---------------------------------------------------------------------------
+
+def grid_2d(n: int = 256) -> np.ndarray:
+    """⌈√n⌉×⌈√n⌉ 4-neighbour lattice truncated to n nodes (metro mesh)."""
+    cols = int(np.ceil(np.sqrt(n)))
+    edges = []
+    for i in range(n):
+        r, c = divmod(i, cols)
+        if c + 1 < cols and i + 1 < n:
+            edges.append((i, i + 1))
+        if i + cols < n:
+            edges.append((i, i + cols))
+    return _from_edges(n, edges)
+
+
+def random_geometric(n: int = 256, radius: float | None = None,
+                     seed: int = 0, max_tries: int = 50) -> np.ndarray:
+    """Connected random geometric graph on the unit square (radio range).
+
+    Default radius ~ √(2·ln n / n) sits just above the connectivity
+    threshold; retries grow it by 15% until the draw connects.
+    """
+    rng = np.random.default_rng(seed)
+    r = radius if radius is not None else float(np.sqrt(2.0 * np.log(n) / n))
+    for _ in range(max_tries):
+        pts = rng.random((n, 2))
+        d2 = ((pts[:, None, :] - pts[None, :, :]) ** 2).sum(-1)
+        adj = d2 <= r * r
+        np.fill_diagonal(adj, False)
+        if _connected(adj):
+            return adj
+        r *= 1.15
+    raise RuntimeError("could not draw a connected geometric graph")
+
+
+def power_law(n: int = 1024, m: int = 2, seed: int = 0) -> np.ndarray:
+    """Barabási–Albert preferential attachment (degree-skewed edge fleet).
+
+    Always connected; mean degree ≈ 2m, diameter O(log n) — the shallow
+    ``depth_max`` makes it the headline topology of ``bench_sparse``.
+    """
+    rng = np.random.default_rng(seed)
+    adj = np.zeros((n, n), bool)
+    targets = list(range(m + 1))            # small connected seed clique
+    for i, j in [(a, b) for a in targets for b in targets if a < b]:
+        adj[i, j] = adj[j, i] = True
+    repeated = [v for v in targets for _ in range(m)]
+    for v in range(m + 1, n):
+        chosen: set[int] = set()
+        while len(chosen) < m:
+            chosen.add(int(repeated[rng.integers(len(repeated))]))
+        for u in chosen:
+            adj[u, v] = adj[v, u] = True
+        repeated.extend(chosen)
+        repeated.extend([v] * m)
+    np.fill_diagonal(adj, False)
+    return adj
+
+
+FLEET_KINDS = ("grid_2d", "random_geometric", "power_law")
+
+
+def make_fleet(kind: str, n: int, seed: int = 0) -> np.ndarray:
+    """Fleet-scale sparse adjacency by kind (``FLEET_KINDS``)."""
+    gens = {"grid_2d": lambda: grid_2d(n),
+            "random_geometric": lambda: random_geometric(n, seed=seed),
+            "power_law": lambda: power_law(n, seed=seed)}
+    return gens[kind]()
+
+
 # paper Table II mean link capacities
 MEAN_CAPACITY = {"connected_er": 10.0, "abilene": 15.0, "balanced_tree": 10.0,
                  "fog": 10.0, "geant": 10.0}

@@ -1,52 +1,188 @@
-"""Fallback for environments without ``hypothesis`` installed.
+"""Bundled property-test sampler — the *executing* fallback for
+environments without ``hypothesis`` installed.
 
-Test modules import this when ``from hypothesis import ...`` fails, so
-only the property-based tests skip — the rest of the module still runs:
+Test modules import this when ``from hypothesis import ...`` fails:
 
     try:
         from hypothesis import given, settings, strategies as st
     except ModuleNotFoundError:
         from hypothesis_stub import given, settings, st
 
-``given`` replaces the test with an argument-less skip stub (no fixture
-resolution is attempted on the hypothesis strategy parameters);
-``settings`` is a pass-through; ``st`` swallows any strategy expression
-evaluated at decoration time.
+Unlike the pre-PR-4 stub, this does **not** skip: ``@given`` runs the
+property ``max_examples`` times against deterministically seeded random
+draws (seed derived from the test's qualified name, so failures reproduce
+run-to-run) and re-raises the first failure annotated with the drawn
+example.  What it does not do is everything that makes hypothesis worth
+installing — shrinking, coverage-guided generation, the example database
+— so it is a fallback of last resort, not an alternative.
+
+CI must never land here: the test jobs set ``REPRO_REQUIRE_REAL_HYPOTHESIS
+=1``, which turns this import into an immediate error, so a CI image that
+silently lost the real dependency fails loudly instead of testing less
+(the property suite's acceptance bar is "executes under real hypothesis").
+Only the strategy combinators this repo's tests use are implemented;
+extending the suite with a new combinator means adding it here too (or,
+better, running with hypothesis installed).
 """
 from __future__ import annotations
 
-import pytest
+import inspect
+import os
+import warnings
+import zlib
 
-_REASON = "hypothesis is not installed (pip install -r requirements-dev.txt)"
+import numpy as np
+
+if os.environ.get("REPRO_REQUIRE_REAL_HYPOTHESIS"):
+    raise ModuleNotFoundError(
+        "hypothesis is required here (REPRO_REQUIRE_REAL_HYPOTHESIS is "
+        "set): pip install -r requirements-dev.txt — the bundled sampler "
+        "fallback is disabled")
+
+warnings.warn(
+    "property tests are executing under the bundled sampler "
+    "(tests/hypothesis_stub.py) — install hypothesis for shrinking and "
+    "smarter generation",
+    stacklevel=2)
+
+_DEFAULT_EXAMPLES = 25
 
 
-class _AnyStrategy:
-    """Accepts any ``st.<strategy>(...)`` chain used at decoration time."""
+class _Strategy:
+    """A draw rule; ``example(rng)`` produces one value."""
 
-    def __getattr__(self, name):
-        return lambda *a, **k: self
+    def __init__(self, draw):
+        self._draw = draw
 
-    def __call__(self, *a, **k):
-        return self
+    def example(self, rng: np.random.Generator):
+        return self._draw(rng)
 
 
-st = _AnyStrategy()
+class _DataSentinel:
+    """Marker returned by ``st.data()``."""
+
+
+class _DataObject:
+    """Interactive draw handle passed for ``st.data()`` parameters."""
+
+    def __init__(self, rng: np.random.Generator):
+        self._rng = rng
+        self.drawn: list = []
+
+    def draw(self, strategy: _Strategy, label: str | None = None):
+        value = strategy.example(self._rng)
+        self.drawn.append(value if label is None else (label, value))
+        return value
+
+
+class st:
+    """The strategy combinators used by this repo's test suite."""
+
+    @staticmethod
+    def integers(min_value: int, max_value: int) -> _Strategy:
+        return _Strategy(
+            lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+    @staticmethod
+    def floats(min_value: float, max_value: float, allow_nan: bool = False,
+               allow_infinity: bool = False, width: int = 64) -> _Strategy:
+        def draw(rng):
+            r = rng.random()
+            if r < 0.05:                    # boundary bias, like hypothesis
+                v = float(min_value)
+            elif r < 0.10:
+                v = float(max_value)
+            else:
+                v = float(rng.uniform(min_value, max_value))
+            return float(np.float32(v)) if width == 32 else v
+        return _Strategy(draw)
+
+    @staticmethod
+    def booleans() -> _Strategy:
+        return _Strategy(lambda rng: bool(rng.integers(0, 2)))
+
+    @staticmethod
+    def sampled_from(seq) -> _Strategy:
+        seq = list(seq)
+        return _Strategy(lambda rng: seq[int(rng.integers(len(seq)))])
+
+    @staticmethod
+    def lists(elements: _Strategy, min_size: int = 0,
+              max_size: int = 10) -> _Strategy:
+        return _Strategy(lambda rng: [
+            elements.example(rng)
+            for _ in range(int(rng.integers(min_size, max_size + 1)))])
+
+    @staticmethod
+    def tuples(*elements: _Strategy) -> _Strategy:
+        return _Strategy(lambda rng: tuple(e.example(rng) for e in elements))
+
+    @staticmethod
+    def just(value) -> _Strategy:
+        return _Strategy(lambda rng: value)
+
+    @staticmethod
+    def one_of(*strategies: _Strategy) -> _Strategy:
+        return _Strategy(lambda rng: strategies[
+            int(rng.integers(len(strategies)))].example(rng))
+
+    @staticmethod
+    def data() -> _DataSentinel:
+        return _DataSentinel()
 
 
 def settings(*args, **kwargs):
+    """``@settings(max_examples=..., deadline=...)`` — records the options
+    for the ``@given`` wrapper underneath it (deadline is ignored)."""
     if args and callable(args[0]):          # bare @settings
         return args[0]
-    return lambda fn: fn                    # @settings(...)
 
-
-def given(*args, **kwargs):
     def deco(fn):
-        @pytest.mark.skip(reason=_REASON)
-        def stub():
-            pass
+        fn._stub_settings = dict(kwargs)
+        return fn
 
-        stub.__name__ = fn.__name__
-        stub.__doc__ = fn.__doc__
-        return stub
+    return deco
+
+
+def given(*args, **strategies):
+    """Run the property against ``max_examples`` seeded random draws."""
+    if args:
+        raise TypeError("the bundled sampler supports keyword strategies "
+                        "only — use @given(name=st....)")
+
+    def deco(fn):
+        seed0 = zlib.crc32(f"{fn.__module__}.{fn.__qualname__}".encode())
+
+        def wrapper(*a, **kw):
+            # @settings may sit above @given (lands on wrapper) or below
+            # it (lands on fn) — real hypothesis accepts both orders
+            opts = (getattr(wrapper, "_stub_settings", None)
+                    or getattr(fn, "_stub_settings", {}))
+            n = int(opts.get("max_examples", _DEFAULT_EXAMPLES))
+            for ex in range(n):
+                rng = np.random.default_rng((seed0, ex))
+                drawn = {}
+                for name, s in strategies.items():
+                    drawn[name] = (_DataObject(rng)
+                                   if isinstance(s, _DataSentinel)
+                                   else s.example(rng))
+                try:
+                    fn(*a, **kw, **drawn)
+                except Exception as e:  # noqa: BLE001 — annotate + re-raise
+                    shown = {k: (v.drawn if isinstance(v, _DataObject) else v)
+                             for k, v in drawn.items()}
+                    raise AssertionError(
+                        f"property falsified on example {ex + 1}/{n}: "
+                        f"{shown!r}") from e
+
+        # hide the strategy parameters from pytest's fixture resolution
+        # while keeping any real fixture parameters visible
+        sig = inspect.signature(fn)
+        wrapper.__signature__ = sig.replace(parameters=[
+            p for name, p in sig.parameters.items() if name not in strategies])
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        wrapper.__module__ = fn.__module__
+        return wrapper
 
     return deco

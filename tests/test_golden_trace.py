@@ -1,0 +1,40 @@
+"""Golden-trace regression: the Fig. 7 gs_oma utility trajectory.
+
+The committed NPZ (tests/golden/, written by scripts/make_golden_trace.py)
+pins the full fused control step — perturbation order, oracle
+observations, mirror ascent, exact projection, committed observation — on
+the paper's main instance.  Any numerical drift in that path now fails
+tier-1 instead of surfacing as a silent benchmark regression.  The
+tolerance absorbs cross-platform/JAX-version instruction reordering; a
+real semantic change blows straight through it (and should regenerate the
+fixture with an explicit commit-message note).
+"""
+import pathlib
+import sys
+
+import numpy as np
+
+_ROOT = pathlib.Path(__file__).resolve().parents[1]
+if str(_ROOT) not in sys.path:          # scripts/ is a namespace package
+    sys.path.insert(0, str(_ROOT))
+
+GOLDEN = pathlib.Path(__file__).parent / "golden" / "fig7_gs_oma_traj.npz"
+
+
+def test_gs_oma_matches_golden_trace():
+    from scripts.make_golden_trace import CONFIG, solve
+
+    ref = np.load(GOLDEN)
+    # the fixture must have been generated from this exact configuration
+    assert int(ref["cfg_outer_iters"]) == CONFIG["outer_iters"]
+    assert float(ref["cfg_lam_total"]) == CONFIG["lam_total"]
+    assert str(ref["cfg_method"]) == CONFIG["method"]
+
+    res = solve()
+    np.testing.assert_allclose(
+        np.asarray(res.utility_traj, np.float64), ref["utility_traj"],
+        rtol=2e-4, atol=2e-3,
+        err_msg="gs_oma utility trajectory drifted from the golden trace — "
+                "if intentional, regenerate via scripts/make_golden_trace.py")
+    np.testing.assert_allclose(np.asarray(res.lam, np.float64), ref["lam"],
+                               rtol=2e-4, atol=2e-3)

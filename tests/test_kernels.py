@@ -5,7 +5,9 @@ import numpy as np
 import pytest
 
 from repro.kernels import ref
-from repro.kernels.ops import flash_attention_op, flow_step_op, omd_update_op
+from repro.kernels.ops import (flash_attention_op, flow_step_op,
+                               flow_step_sparse_op, omd_update_op,
+                               omd_update_sparse_op)
 
 KEY = jax.random.PRNGKey(0)
 
@@ -114,6 +116,68 @@ def test_flow_kernel_agrees_with_core_propagate(er25_cec):
     want = propagate(g, phi, lam)
     np.testing.assert_allclose(np.asarray(t), np.asarray(want),
                                rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("W,N,D,Din", [(3, 29, 6, 5), (1, 128, 16, 16),
+                                       (2, 200, 9, 3), (3, 64, 130, 140)])
+def test_flow_step_sparse_matches_ref(W, N, D, Din):
+    """Sparse gather step vs oracle over random in-lists (incl. >128 slots)."""
+    rng = np.random.default_rng(N * 7 + D)
+    t = jnp.asarray(rng.uniform(0, 2, (W, N)), jnp.float32)
+    rows = jnp.asarray(rng.uniform(0, 1, (W, N, D)), jnp.float32)
+    base = jnp.asarray(rng.uniform(0, 1, (W, N)), jnp.float32)
+    in_src = jnp.asarray(rng.integers(0, N, (N, Din)), jnp.int32)
+    in_slot = jnp.asarray(rng.integers(0, D, (N, Din)), jnp.int32)
+    in_mask = jnp.asarray(rng.random((N, Din)) > 0.4, jnp.float32)
+    got = flow_step_sparse_op(t, rows, base, in_src, in_slot, in_mask)
+    want = ref.flow_step_sparse_ref(t, rows, base, in_src, in_slot, in_mask)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("W,R,C,eta", [(3, 29, 7, 0.5), (2, 128, 130, 3.0),
+                                       (1, 257, 2, 1.0), (3, 1, 40, 1.0)])
+def test_omd_update_sparse_matches_ref(W, R, C, eta):
+    """Rectangular [W, R, C] slot rows (incl. the 1-row source layout)."""
+    ks = jax.random.split(KEY, 3)
+    mask = (jax.random.uniform(ks[0], (W, R, C)) > 0.5).astype(jnp.float32)
+    raw = jnp.abs(_rand(ks[1], (W, R, C), jnp.float32)) * mask
+    s = raw.sum(-1, keepdims=True)
+    phi = jnp.where(s > 0, raw / jnp.where(s > 0, s, 1), 0.0)
+    delta = jnp.abs(_rand(ks[2], (W, R, C), jnp.float32)) * 5
+    got = omd_update_sparse_op(phi, delta, mask, eta)
+    want = ref.omd_update_sparse_ref(phi, delta, mask, eta)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+    rows = np.asarray(got).sum(-1)
+    has = np.asarray(mask).sum(-1) > 0
+    np.testing.assert_allclose(rows[has], 1.0, atol=1e-5)
+
+
+def test_sparse_kernels_agree_with_core_sparse_step(er25_cec):
+    """End-to-end: kernels reproduce core.sparse's jnp relay/update math."""
+    from repro.core import get_cost, sparsify
+    from repro.core import sparse as sp
+    from repro.core.flow import cost_and_state
+    from repro.core.marginal import marginals
+
+    gs = sparsify(er25_cec)
+    cost = get_cost("exp")
+    lam = jnp.array([20.0, 20.0, 20.0])
+    phi = gs.uniform_phi()
+    base = sp.source_inflow(gs, phi, lam)
+    t0 = gs.injection(lam)
+    got = flow_step_sparse_op(t0, phi.rows, base, gs.in_src, gs.in_slot,
+                              gs.in_mask)
+    want = base + sp._relay_inflow(gs, phi.rows, t0)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+    _, t, F = cost_and_state(gs, cost, phi, lam)
+    delta, _ = marginals(gs, cost, phi, t, F)
+    upd = omd_update_sparse_op(phi.rows, delta.rows, gs.out_mask, 1.0)
+    want_upd = sp.eg_update(phi.rows, delta.rows, gs.out_mask, 1.0)
+    np.testing.assert_allclose(np.asarray(upd), np.asarray(want_upd),
+                               rtol=1e-5, atol=1e-5)
 
 
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])

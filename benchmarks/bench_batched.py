@@ -1,8 +1,9 @@
 """Batched JOWR engine: per-instance wall-clock for batch sizes {1, 8, 32}.
 
 Measures the tentpole claim directly: solving B Connected-ER(25, .2)
-instances as one vmapped XLA program (``solve_jowr_batch``) vs a Python
-loop of jitted per-instance ``solve_jowr`` calls over the same draws.
+instances as one vmapped XLA program (``run_batch`` — ``jax.vmap`` of
+``solver.run``) vs a Python loop of jitted per-instance ``solver.run``
+calls over the same draws.
 Reports seconds/instance for both and the batching speedup.
 ``measure_seq_vs_batched`` is the single implementation of that
 measurement — the §Perf control-plane cell in perf_iterations.py reuses
@@ -17,23 +18,23 @@ from __future__ import annotations
 
 import jax
 
-from repro.core import (CECGraphBatch, build_random_cec, make_bank,
-                        solve_jowr, solve_jowr_batch, stack_banks)
+from repro.core import (CECGraphBatch, Problem, SolverConfig,
+                        build_random_cec, make_bank, run, run_batch,
+                        stack_banks)
 from repro.topo import connected_er
 
 from . import common
 from .common import dump, emit, timeit
 
 LAM_TOTAL = 60.0
+CONFIG = SolverConfig(method="single", eta_outer=0.05, eta_inner=3.0)
 
 
 def measure_seq_vs_batched(B: int, outer_iters: int,
                            graphs=None, banks=None) -> tuple[float, float]:
     """(sequential seconds, batched seconds) for the same B-instance OMAD
-    ensemble: a Python loop of jitted ``solve_jowr`` calls vs one jitted
-    ``solve_jowr_batch`` program."""
-    kw = dict(method="single", eta_outer=0.05, eta_inner=3.0,
-              outer_iters=outer_iters)
+    ensemble: a Python loop of jitted per-instance ``solver.run`` calls
+    vs one jitted ``run_batch`` program."""
     if graphs is None:
         n = common.scaled(25, 12)
         graphs = [build_random_cec(connected_er(n, 0.2, seed=1 + s), 3,
@@ -43,11 +44,14 @@ def measure_seq_vs_batched(B: int, outer_iters: int,
                  for s in range(B)]
     graphs, banks = graphs[:B], banks[:B]
 
-    seq = jax.jit(lambda g, bk: solve_jowr(g, bk, LAM_TOTAL, **kw))
+    seq = jax.jit(lambda g, bk: run(
+        Problem(graph=g, bank=bk, lam_total=LAM_TOTAL), CONFIG,
+        iters=outer_iters))
     _, t_seq = timeit(lambda: [seq(g, bk) for g, bk in zip(graphs, banks)])
 
     batch = CECGraphBatch.from_graphs(graphs)
-    fn = jax.jit(lambda bk: solve_jowr_batch(batch, bk, LAM_TOTAL, **kw))
+    fn = jax.jit(lambda bk: run_batch(batch, bk, LAM_TOTAL, CONFIG,
+                                      iters=outer_iters))
     _, t_batched = timeit(fn, stack_banks(banks))
     return t_seq, t_batched
 

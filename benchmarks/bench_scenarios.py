@@ -15,7 +15,8 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.core import named_scenarios, run_scenario, scenario_metrics
+from repro.core import (named_scenarios, run_scenario, scenario_metrics,
+                        serving_defaults)
 
 from . import common
 from .common import dump, emit, timeit
@@ -31,7 +32,9 @@ def main() -> list[dict]:
     rows = []
     for name, sc in named_scenarios(horizon=horizon, n=n, p=p).items():
         res, secs = timeit(
-            lambda sc=sc: run_scenario(sc, seeds=seeds), warmup=0, iters=1)
+            lambda sc=sc: run_scenario(sc, seeds=seeds,
+                                       config=serving_defaults()),
+            warmup=0, iters=1)
         m = scenario_metrics(res, recovery_frac=RECOVERY_FRAC)
         traj = np.asarray(res.utility_traj).mean(0)
         row = {"scenario": name, "n_seeds": len(seeds), "horizon": horizon,

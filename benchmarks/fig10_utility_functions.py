@@ -3,8 +3,8 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.core import (build_random_cec, exact_gradient_allocation, get_cost,
-                        make_bank, solve_jowr)
+from repro.core import (Problem, SolverConfig, build_random_cec,
+                        exact_gradient_allocation, get_cost, make_bank, run)
 from repro.topo import connected_er
 
 from . import common
@@ -17,17 +17,17 @@ def main() -> list[dict]:
     n = common.scaled(25, 12)
     g = build_random_cec(connected_er(n, 0.2, seed=1), 3, 10.0, seed=0)
     cost = get_cost("exp")
+    config = SolverConfig(method="nested", eta_outer=0.05, eta_inner=3.0,
+                          inner_iters=common.scaled(40, 5))
     rows = []
     for kind in ("linear", "sqrt", "quadratic", "log"):
         bank = make_bank(kind, 3, seed=0, lam_total=LAM_TOTAL)
+        problem = Problem.create(g, bank, lam_total=LAM_TOTAL, cost=cost)
         # the paper observes linear utilities need ~400 outer iterations
         # while log needs ~30 (Fig. 10) — same behaviour here
         iters = common.scaled(400 if kind == "linear" else 80, 6)
         res, secs = timeit(
-            lambda b=bank, it=iters: solve_jowr(
-                g, b, LAM_TOTAL, method="nested", eta_outer=0.05,
-                eta_inner=3.0, outer_iters=it,
-                inner_iters=common.scaled(40, 5)),
+            lambda p=problem, it=iters: run(p, config, iters=it),
             warmup=0, iters=1)
         _, _, u_star = exact_gradient_allocation(
             g, cost, bank, LAM_TOTAL, eta=0.1,

@@ -6,15 +6,16 @@ control-plane work per outer step; (ii) both re-converge online after the
 network topology changes mid-run, single-loop from a worse initial point.
 
 Runs on the batched path: B instance pairs (pre-/post-change draws) solve
-as one vmapped ``solve_jowr_batch`` program per phase, warm-starting the
-second phase from the first's stacked iterates; curves are ensemble means.
+as one vmapped ``run_batch`` program per phase, threading the solver
+core's stacked ``SolverState`` across the change (φ re-mixed through
+``warm_start_phi``); curves are ensemble means.
 """
 from __future__ import annotations
 
 import numpy as np
 
-from repro.core import (CECGraphBatch, build_random_cec, make_bank,
-                        solve_jowr_batch, warm_start_phi)
+from repro.core import (CECGraphBatch, SolverConfig, build_random_cec,
+                        make_bank, run_batch, warm_start_phi)
 from repro.topo import connected_er
 
 from . import common
@@ -37,16 +38,15 @@ def main() -> list[dict]:
 
     rows = []
     for method, inner in (("nested", common.scaled(40, 5)), ("single", 1)):
-        def run():
-            r1 = solve_jowr_batch(batch1, bank, LAM_TOTAL, method=method,
-                                  eta_outer=0.05, eta_inner=3.0,
-                                  outer_iters=phase, inner_iters=inner)
-            r2 = solve_jowr_batch(batch2, bank, LAM_TOTAL, method=method,
-                                  eta_outer=0.05, eta_inner=3.0,
-                                  outer_iters=phase, inner_iters=inner,
-                                  lam0=r1.lam,
-                                  phi0=warm_start_phi(r1.phi,
-                                                      batch2.out_mask))
+        config = SolverConfig(method=method, eta_outer=0.05, eta_inner=3.0,
+                              inner_iters=inner)
+
+        def run(config=config):
+            r1 = run_batch(batch1, bank, LAM_TOTAL, config, iters=phase)
+            warm = r1.state._replace(
+                phi=warm_start_phi(r1.state.phi, batch2.out_mask))
+            r2 = run_batch(batch2, bank, LAM_TOTAL, config, iters=phase,
+                           state=warm)
             return r1, r2
 
         (r1, r2), secs = timeit(run, warmup=0, iters=1)

@@ -11,7 +11,7 @@ Cells (selection rationale in EXPERIMENTS.md):
   jamba-1.5-large-398b × train_4k — paper-scale MoE/hybrid, memory-bound
 
 Plus one control-plane cell on the batched JOWR path: sequential jitted
-per-instance solves vs one vmapped ``solve_jowr_batch`` program over the
+per-instance solves vs one vmapped ``run_batch`` program over the
 same ensemble (hypothesis: vmap amortizes per-solve dispatch and compiles
 one fused scan → per-instance time drops).
 """
@@ -51,7 +51,7 @@ HYPOTHESES = {
     "hybridshard": "FSDP dense weights + expert-parallel MoE: drops TP "
                    "activation all-reduces on the non-expert 78%% of the "
                    "model → wire ≈ −25%",
-    "batched_vmap": "one vmapped solve_jowr_batch program over B instances "
+    "batched_vmap": "one vmapped run_batch program over B instances "
                     "amortizes per-solve dispatch vs a Python loop of "
                     "jitted solves → per-instance time drops",
 }

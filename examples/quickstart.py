@@ -4,7 +4,7 @@
 """
 import numpy as np
 
-from repro.core import build_random_cec, make_bank, solve_jowr
+from repro.core import Problem, SolverConfig, build_random_cec, make_bank, run
 from repro.topo import connected_er
 
 # 1. a CEC fleet: 25 edge devices, 3 DNN model versions (paper §IV setup)
@@ -14,9 +14,13 @@ graph = build_random_cec(adj, n_versions=3, mean_link_capacity=10.0, seed=0)
 # 2. unknown utilities (the solver only ever observes scalar feedback)
 bank = make_bank("log", n_sessions=3, seed=0, lam_total=60.0)
 
-# 3. joint workload allocation + routing, single-loop online algorithm
-res = solve_jowr(graph, bank, lam_total=60.0, method="single",
-                 eta_outer=0.05, eta_inner=3.0, outer_iters=200)
+# 3. the problem (what is optimized) and the solver config (how):
+#    single-loop online OMAD — `repro.configs.cec_paper.solver_config()`
+#    and `solver.paper_defaults()/serving_defaults()` are named presets
+problem = Problem.create(graph, bank, lam_total=60.0, cost="exp")
+config = SolverConfig(method="single", eta_outer=0.05, eta_inner=3.0)
+
+res = run(problem, config, iters=200)
 
 print("allocation Λ* =", np.round(np.asarray(res.lam), 2))
 print("network utility trajectory:",

@@ -6,7 +6,8 @@ exploration-mix φ restart now lives in the library
 
     PYTHONPATH=src python examples/topology_failover.py
 """
-from repro.core import Rewire, Scenario, run_scenario, scenario_metrics
+from repro.core import (Rewire, Scenario, run_scenario, scenario_metrics,
+                        serving_defaults)
 
 scenario = Scenario(
     "failover", horizon=120,
@@ -15,7 +16,9 @@ scenario = Scenario(
     topo_kwargs={"n": 25, "p": 0.2}, mean_capacity=10.0, lam_total=60.0,
 )
 
-res = run_scenario(scenario, seeds=(0, 1, 2, 3))   # one vmapped program/segment
+# one vmapped program per segment; the solver core's SolverState is
+# threaded (warm-started) across the event boundary
+res = run_scenario(scenario, seeds=(0, 1, 2, 3), config=serving_defaults())
 m = scenario_metrics(res, recovery_frac=0.95)
 (ev,) = m["events"]
 

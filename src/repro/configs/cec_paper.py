@@ -36,3 +36,28 @@ def build(scenario: CECScenario = PAPER, seed: int = 1):
     bank = make_bank(scenario.utility_kind, scenario.n_versions, seed=0,
                      lam_total=scenario.lam_total)
     return graph, bank
+
+
+def solver_config(scenario: CECScenario = PAPER, *,
+                  method: str = "single"):
+    """The §IV evaluation knobs as a named ``SolverConfig`` preset.
+
+    The paper runs its online evaluation with the hot η_inner=3.0 oracle
+    (cf. ``solver.serving_defaults``); ``method`` picks GS-OMA
+    ("nested") or OMAD ("single").
+    """
+    from repro.core.solver import SolverConfig
+
+    return SolverConfig(method=method, delta=scenario.delta,
+                        eta_outer=scenario.eta_outer,
+                        eta_inner=scenario.eta_inner,
+                        inner_iters=1 if method == "single" else 50)
+
+
+def build_problem(scenario: CECScenario = PAPER, seed: int = 1):
+    """The §IV instance as a first-class ``Problem`` (graph+bank+cost+λ)."""
+    from repro.core.problem import Problem
+
+    graph, bank = build(scenario, seed)
+    return Problem.create(graph, bank, lam_total=scenario.lam_total,
+                          cost=scenario.cost_name)

@@ -1,11 +1,21 @@
-"""Core CEC control plane: the paper's JOWR contribution in JAX."""
-from . import dispatch
+"""Core CEC control plane: the paper's JOWR contribution in JAX.
+
+One solver core (DESIGN.md §13): describe the instance as a
+:class:`Problem` (``core/problem.py``), pick a :class:`SolverConfig`
+(``core/solver.py`` — or a named preset: ``paper_defaults``,
+``serving_defaults``, ``repro.configs.cec_paper.solver_config``), then
+``init``/``step``/``run``.  Everything else exported here —
+``solve_jowr``, ``gs_oma``/``omad``, the batched ensemble solvers,
+``run_scenario``, the serving router — is a shim or consumer of that
+engine.
+"""
+from . import dispatch, solver
 from .allocation import (ControlStep, JOWRResult, allocation_kkt_residual,
                          control_step, fused_control_step, gs_oma,
                          perturbed_allocations)
 from .batch import (CECGraphBatch, CECGraphSparseBatch, pad_graph,
-                    pad_sparse_graph, solve_jowr_batch, solve_routing_batch,
-                    stack_banks)
+                    pad_sparse_graph, run_batch, solve_jowr_batch,
+                    solve_routing_batch, stack_banks)
 from .costs import CostFn, get as get_cost
 from .flow import cost_and_state, link_flows, propagate, total_cost
 from .graph import (CECGraph, CECGraphSparse, InfeasibleTopology,
@@ -15,6 +25,10 @@ from .graph import (CECGraph, CECGraphSparse, InfeasibleTopology,
 from .jowr import solve_jowr
 from .marginal import marginals, phi_gradient
 from .opt_baseline import exact_gradient_allocation, frank_wolfe_routing
+from .problem import Problem, resolve_cost
+from .solver import (Result, SolverConfig, SolverState, StepInfo, fused_step,
+                     init, paper_defaults, project_box_simplex, run,
+                     serving_defaults, step)
 from .routing import (RoutingState, kkt_residual, omd_step, oracle_observe,
                       project_simplex_masked, sgp_step, solve_routing,
                       solve_routing_sgp, warm_start_phi)
@@ -27,6 +41,12 @@ from .single_loop import omad
 from .utility import UtilityBank, make_bank
 
 __all__ = [
+    # the solver core (DESIGN.md §13)
+    "Problem", "SolverConfig", "SolverState", "StepInfo", "Result",
+    "init", "step", "run", "fused_step", "run_batch",
+    "paper_defaults", "serving_defaults", "project_box_simplex",
+    "resolve_cost", "solver",
+    # legacy shims + everything they ride on
     "ControlStep", "JOWRResult", "allocation_kkt_residual", "control_step",
     "fused_control_step", "gs_oma", "oracle_observe",
     "perturbed_allocations", "CostFn", "get_cost",

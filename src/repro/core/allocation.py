@@ -1,31 +1,13 @@
-"""Workload allocation under unknown utilities: GS-OMA (paper Alg. 1).
+"""Legacy GS-OMA entry points — thin shims over the solver core.
 
-Outer loop over t: for each session w, the controller *admits* the perturbed
-allocations Λ ± δ·e_w, lets the routing layer serve them (the oracle 𝔒 =
-OMD-RT, Assumption 4), and observes the resulting scalar network utilities
-U± — two-point gradient sampling (Flaxman et al.).  The estimated gradient
-feeds an online mirror-ascent step on the scaled simplex {Σλ_w = λ}
-(eq. (10)), followed by the exact projection onto the box-simplex
-intersection P_[δ,λ−δ].
-
-The single outer iteration is factored out as :func:`control_step` — one
-`lax.scan` over the 2W perturbed observations, mirror ascent, projection,
-and a final observation at the *committed* allocation — so the offline
-solver (`gs_oma`, batched/vmapped by `core/batch.py`) and the live serving
-router (`serve/cec_router.py`, via the jitted :func:`fused_control_step`)
-run the *same* update math; there is no second implementation anywhere
-(DESIGN.md §11).  Task utilities enter `control_step` as a precomputed
-[2W] vector: the perturbed admissions of an iteration depend only on Λ^t,
-so a bank evaluates them under vmap inside the jit while a serving fleet
-measures them out-of-band and injects the observations.
-
-The same engine with ``inner_iters=1`` *is* the single-loop OMAD algorithm
-(Alg. 3): the routing iterate φ is carried across all oracle invocations and
-improves by exactly one mirror-descent step per observation, never waiting
-for inner convergence (see single_loop.py).
-
-Everything scans under jit — T outer iterations × (2W + 1) oracle calls ×
-K routing steps with zero Python in the loop.
+The fused control iteration (paper Alg. 1, and with K=1 Alg. 3) lives in
+``core/solver.py`` as ``step``, scanned by ``run`` over a
+``core/problem.Problem``; this module keeps the pre-redesign surface —
+``gs_oma``, ``control_step``, ``fused_control_step``, ``JOWRResult`` /
+``ControlStep`` — as keyword-compatible projections of that one engine.
+Nothing here re-implements solver math: every function builds a
+``Problem`` + ``SolverConfig`` and delegates (DESIGN.md §13 has the
+old-call → new-call migration table).
 """
 from __future__ import annotations
 
@@ -35,21 +17,34 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-from . import costs as _costs
 from . import dispatch
+from . import solver as _solver
 from .costs import CostFn
 from .graph import CECGraph
-from .routing import oracle_observe
+from .problem import Problem, resolve_cost
+from .solver import SolverConfig, SolverState
+# re-exported names that historically lived here (tests, benchmarks and
+# the serving plane import them from this module)
+from .solver import perturbed_allocations  # noqa: F401
+from .solver import _perturbation_basis  # noqa: F401
+from .solver import project_box_simplex as _project_box_simplex  # noqa: F401
 from .utility import UtilityBank
 
 Array = jnp.ndarray
 
 
 class JOWRResult(NamedTuple):
+    """The pre-redesign solve record (``solver.Result`` minus the state)."""
+
     lam: Array          # [W] final allocation Λ
     phi: Array          # [W, Nb, Nb] final routing
     utility_traj: Array  # [T] observed network utility U(Λ^t, φ^t)
     lam_traj: Array     # [T, W]
+
+    @classmethod
+    def from_result(cls, res: _solver.Result) -> "JOWRResult":
+        return cls(lam=res.lam, phi=res.phi,
+                   utility_traj=res.utility_traj, lam_traj=res.lam_traj)
 
 
 class ControlStep(NamedTuple):
@@ -59,65 +54,6 @@ class ControlStep(NamedTuple):
     phi: Array          # [W, Nb, Nb] routing after the committed observation
     grad: Array         # [W] two-point gradient estimate ĝ^t
     cost: Array         # scalar network cost D(Λ^{t+1}, φ^{t+1})
-
-
-def _project_box_simplex(lam: Array, lam_total, delta: float) -> Array:
-    """Exact projection onto {δ ≤ λ_w ≤ λ−δ, Σλ_w = λ} (Alg. 1 line 9).
-
-    Euclidean projection in closed form: x = clip(y − τ*, δ, λ−δ) where τ*
-    solves Σ_w x_w(τ) = λ.  The sum is piecewise linear and non-increasing
-    in τ with breakpoints {y_w − δ, y_w − (λ−δ)}; sorting the 2W
-    breakpoints and interpolating on the bracketing segment gives the exact
-    τ* (water-filling on the dual), no iterative tolerance involved.  For
-    infeasible targets (λ outside [Wδ, W(λ−δ)]) the clip saturates at the
-    nearest box vertex.
-
-    Last-axis semantics so stacked ``[B, W]`` iterates (the scenario
-    engine's per-instance rows) project exactly like a single ``[W]``.
-    """
-    lo, hi = delta, lam_total - delta
-    y = jnp.asarray(lam)
-    bp = jnp.sort(jnp.concatenate([y - lo, y - hi], axis=-1), -1)  # [..., 2W]
-    # Σ clip(y − τ) evaluated at every breakpoint: non-increasing in τ,
-    # from W·(λ−δ) at bp[0] down to W·δ at bp[-1].
-    s = jnp.clip(y[..., None, :] - bp[..., :, None], lo, hi).sum(-1)
-    # bracketing segment: largest k with s_k ≥ λ (linear on [bp_k, bp_k+1])
-    k = jnp.clip((s >= lam_total).sum(-1, keepdims=True) - 1,
-                 0, bp.shape[-1] - 2)
-    t0 = jnp.take_along_axis(bp, k, -1)
-    t1 = jnp.take_along_axis(bp, k + 1, -1)
-    s0 = jnp.take_along_axis(s, k, -1)
-    s1 = jnp.take_along_axis(s, k + 1, -1)
-    drop = jnp.where(s0 > s1, s0 - s1, 1.0)
-    frac = jnp.where(s0 > s1, (s0 - lam_total) / drop, 0.0)
-    tau = t0 + frac * (t1 - t0)
-    return jnp.clip(y - tau, lo, hi)
-
-
-def _perturbation_basis(W: int) -> tuple[Array, Array]:
-    """([2W] signs, [2W, W] directions) — THE observation order.
-
-    Single source of truth shared by :func:`perturbed_allocations` (which
-    callers use to evaluate task utilities up front) and
-    :func:`control_step`'s scan (which pairs those utilities positionally
-    with its observations): rows (2w, 2w+1) are (+e_w, −e_w).
-    """
-    signs = jnp.tile(jnp.asarray([1.0, -1.0], jnp.float32), W)
-    dirs = jnp.repeat(jnp.eye(W, dtype=jnp.float32), 2, axis=0)
-    return signs, dirs
-
-
-def perturbed_allocations(lam: Array, delta: float) -> Array:
-    """[2W, W] admissions of one outer iteration: rows (2w, 2w+1) = Λ ± δ·e_w.
-
-    The row order is the observation order of :func:`control_step`'s scan
-    (see :func:`_perturbation_basis`).  Callers evaluate task utilities
-    over these rows up front — under vmap for a closed-form bank, or
-    batched through a measured-utility callback for a live fleet (the 2W
-    admissions depend only on Λ^t, never on φ).
-    """
-    signs, dirs = _perturbation_basis(lam.shape[-1])
-    return lam + signs[:, None] * delta * dirs
 
 
 def control_step(
@@ -133,55 +69,35 @@ def control_step(
     eta_inner: float = 0.05,
     inner_iters: int = 1,
 ) -> ControlStep:
-    """One fused outer iteration of GS-OMA/OMAD on the current iterates.
+    """One fused outer iteration on explicit iterates (``solver.step``).
 
-    ``task_utilities`` is the [2W] vector of *task* utilities Σ_w u_w(λ_w)
-    observed for the perturbed admissions of :func:`perturbed_allocations`
-    (same row order); the network-cost half of each observation is computed
-    here, at the routing iterate the oracle reached for that admission.
-    The scan carries φ through all 2W observations (one oracle invocation
-    each), takes the mirror-ascent step, projects exactly onto the
-    box-simplex, then observes once more at the committed allocation so
-    the returned (lam, phi, cost) are mutually consistent — the paper's
-    U(Λ^t, φ^t).  Pure traceable JAX: `gs_oma` scans it, `core/batch.py`
-    vmaps it, `fused_control_step` jits it for the serving router.
+    Kept for callers that hold raw (Λ, φ) instead of a ``SolverState``;
+    see :func:`repro.core.solver.step` for the semantics.
     """
-    W = graph.n_sessions
-    signs, dirs = _perturbation_basis(W)
-
-    def observe(carry, inp):
-        g, phi = carry
-        sign, ew, task_u = inp
-        lam_p = lam + sign * delta * ew
-        phi, D = oracle_observe(graph, cost, lam_p, phi, eta_inner,
-                                inner_iters)
-        g = g + sign * ((task_u - D) / (2.0 * delta)) * ew  # Alg. 1 line 6
-        return (g, phi), None
-
-    (g, phi), _ = jax.lax.scan(observe, (jnp.zeros(W), phi),
-                               (signs, dirs, task_utilities))
-    # online mirror ascent on the scaled simplex (eq. (10))
-    z = eta_outer * g
-    z = z - z.max()
-    w = lam * jnp.exp(z)
-    lam_new = lam_total * w / w.sum()
-    lam_new = _project_box_simplex(lam_new, lam_total, delta)
-    phi, D = oracle_observe(graph, cost, lam_new, phi, eta_inner, inner_iters)
-    return ControlStep(lam=lam_new, phi=phi, grad=g, cost=D)
+    config = SolverConfig.from_legacy(delta=delta, eta_outer=eta_outer,
+                                      eta_inner=eta_inner,
+                                      inner_iters=inner_iters)
+    problem = Problem(graph=graph, bank=None, lam_total=lam_total, cost=cost)
+    state = SolverState(lam=lam, phi=phi, t=jnp.int32(0))
+    state, info = _solver.step(problem, config, state, task_utilities)
+    return ControlStep(lam=state.lam, phi=state.phi, grad=info.grad,
+                       cost=info.cost)
 
 
 @functools.lru_cache(maxsize=None)
-def _fused_control_step(cost_name: str, delta: float, eta_outer: float,
-                        eta_inner: float, inner_iters: int, _dispatch_key):
-    cost = _costs.get(cost_name)
+def _fused_control_step(cost_name: str, config: SolverConfig, _dispatch_key):
+    cost = resolve_cost(cost_name)
+    fused = _solver.fused_step(config)
 
     def fn(graph, lam, phi, task_utilities, lam_total):
-        return control_step(graph, cost, lam, phi, task_utilities,
-                            lam_total=lam_total, delta=delta,
-                            eta_outer=eta_outer, eta_inner=eta_inner,
-                            inner_iters=inner_iters)
+        problem = Problem(graph=graph, bank=None, lam_total=lam_total,
+                          cost=cost)
+        state = SolverState(lam=lam, phi=phi, t=jnp.int32(0))
+        state, info = fused(problem, state, task_utilities)
+        return ControlStep(lam=state.lam, phi=state.phi, grad=info.grad,
+                           cost=info.cost)
 
-    return jax.jit(fn)
+    return fn
 
 
 def fused_control_step(cost_name: str, *, delta: float = 0.5,
@@ -189,18 +105,17 @@ def fused_control_step(cost_name: str, *, delta: float = 0.5,
                        inner_iters: int = 1):
     """The jitted fused control step, cached on its static knobs.
 
-    Returns ``fn(graph, lam, phi, task_utilities, lam_total) ->
-    ControlStep``.  ``graph`` is a pytree argument, so same-shape topology
-    changes (the scenario engine's stable-index churn) reuse the compiled
-    executable, and ``lam_total`` is traced so demand shifts never retrace.
-    ``eta_inner`` stays a static Python float — a kernel-path requirement
-    (DESIGN.md §9.2).  The cache is additionally keyed on the kernel
-    dispatch state so tracing inside ``dispatch.kernel_dispatch`` gets the
-    Pallas branch instead of a stale jnp-path trace.
+    Legacy facade over :func:`repro.core.solver.fused_step` — returns
+    ``fn(graph, lam, phi, task_utilities, lam_total) -> ControlStep``.
+    ``graph`` is a pytree argument, so same-shape topology changes reuse
+    the compiled executable, and ``lam_total`` is traced so demand shifts
+    never retrace; the cache is keyed on ``dispatch.state_key()``
+    (DESIGN.md §11).
     """
-    return _fused_control_step(cost_name, float(delta), float(eta_outer),
-                               float(eta_inner), int(inner_iters),
-                               dispatch.state_key())
+    config = SolverConfig.from_legacy(delta=delta, eta_outer=eta_outer,
+                                      eta_inner=eta_inner,
+                                      inner_iters=inner_iters)
+    return _fused_control_step(cost_name, config, dispatch.state_key())
 
 
 def gs_oma(
@@ -219,46 +134,18 @@ def gs_oma(
 ) -> JOWRResult:
     """Nested-loop solver (Alg. 1); ``inner_iters=1`` gives OMAD (Alg. 3).
 
-    A dense graph past the ``dispatch.use_sparse`` (N, density) policy is
-    converted to the edge-list representation before tracing, so the whole
-    outer×inner scan runs in O(E); the returned ``JOWRResult.phi`` is
-    converted back to the dense layout, keeping the public contract
-    representation-independent.  Passing a ``CECGraphSparse`` directly
-    (as ``CECRouter`` does) skips both conversions and yields a
-    ``SparsePhi``.
+    Shim over ``solver.run`` on a ``Problem`` — the representation policy
+    (dense↔sparse, ``dispatch.use_sparse``) is applied by the engine, and
+    the returned ``JOWRResult.phi`` keeps the caller's dense contract.
     """
-    dense_in = graph
-    graph = dispatch.maybe_sparsify(graph, phi0, lam0)
-    converted = graph is not dense_in
-    W = graph.n_sessions
-    lam0 = jnp.full((W,), lam_total / W) if lam0 is None else lam0
-    if phi0 is None:
-        phi0 = graph.uniform_phi()
-    elif converted:
-        from . import sparse as _sparse
-
-        phi0 = _sparse.phi_to_sparse(graph, phi0)
-
-    def outer(carry, _):
-        lam, phi = carry
-        task_u = jax.vmap(bank.total)(perturbed_allocations(lam, delta))
-        step = control_step(graph, cost, lam, phi, task_u,
-                            lam_total=lam_total, delta=delta,
-                            eta_outer=eta_outer, eta_inner=eta_inner,
-                            inner_iters=inner_iters)
-        # the recorded U_t is the paper's U(Λ^t, φ^t): task utility and
-        # network cost both evaluated at the *committed* iterates, not at
-        # the last perturbed observation
-        U_t = bank.total(step.lam) - step.cost
-        return (step.lam, step.phi), (U_t, step.lam)
-
-    (lam, phi), (u_traj, lam_traj) = jax.lax.scan(
-        outer, (lam0, phi0), None, length=outer_iters)
-    if converted:
-        from . import sparse as _sparse
-
-        phi = _sparse.phi_to_dense(graph, phi)
-    return JOWRResult(lam=lam, phi=phi, utility_traj=u_traj, lam_traj=lam_traj)
+    problem = Problem(graph=graph, bank=bank, lam_total=lam_total,
+                      cost=cost)
+    config = SolverConfig.from_legacy(delta=delta, eta_outer=eta_outer,
+                                      eta_inner=eta_inner,
+                                      inner_iters=inner_iters)
+    res = _solver.run(problem, config, iters=outer_iters, phi0=phi0,
+                      lam0=lam0)
+    return JOWRResult.from_result(res)
 
 
 def allocation_kkt_residual(graph: CECGraph, cost: CostFn, bank: UtilityBank,

@@ -27,10 +27,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from . import costs as _costs
+from . import solver as _solver
 from .allocation import JOWRResult
 from .graph import CECGraph, CECGraphSparse
-from .jowr import Method, solve_jowr
+from .problem import Problem, resolve_cost
 from .routing import solve_routing, solve_routing_sgp
+from .solver import Method, SolverConfig, SolverState
 from .utility import UtilityBank
 
 Array = jnp.ndarray
@@ -349,6 +351,48 @@ def _bank_axis(bank: UtilityBank):
     return 0 if bank.a.ndim == 2 else None
 
 
+def run_batch(
+    batch: CECGraphBatch | CECGraphSparseBatch,
+    banks: UtilityBank | Sequence[UtilityBank],
+    lam_total,
+    config: SolverConfig,
+    *,
+    iters: int,
+    cost="exp",
+    state: SolverState | None = None,
+    phi0: Array | None = None,
+    lam0: Array | None = None,
+) -> _solver.Result:
+    """``jax.vmap`` of ``solver.run`` over the instance axis.
+
+    The batched engine *is* the single-instance engine: each vmapped lane
+    builds a ``Problem`` from its slice of the stacked graph/banks and
+    scans ``solver.step``.  ``banks`` is either a list of per-instance
+    banks (stacked internally), a pre-stacked bank with ``a``/``b`` of
+    shape [B, W], or a single bank (shape [W]) broadcast to every
+    instance.  ``state`` (a stacked ``SolverState`` — e.g. a previous
+    ``Result.state``) or ``phi0``/``lam0`` must carry a leading instance
+    axis.  Returns a ``solver.Result`` whose fields are stacked over
+    instances: ``lam`` [B, W], ``utility_traj`` [B, T], ….
+    """
+    if not isinstance(banks, UtilityBank):
+        banks = stack_banks(list(banks))
+    costfn = resolve_cost(cost)
+
+    def one(graph, bank, state, phi0, lam0):
+        problem = Problem(graph=graph, bank=bank, lam_total=lam_total,
+                          cost=costfn)
+        return _solver.run(problem, config, iters=iters, state=state,
+                           phi0=phi0, lam0=lam0)
+
+    in_axes = (0, _bank_axis(banks),
+               None if state is None else 0,
+               None if phi0 is None else 0,
+               None if lam0 is None else 0)
+    return jax.vmap(one, in_axes=in_axes)(
+        batch.stacked_graph(), banks, state, phi0, lam0)
+
+
 def solve_jowr_batch(
     batch: CECGraphBatch | CECGraphSparseBatch,
     banks: UtilityBank | Sequence[UtilityBank],
@@ -366,28 +410,18 @@ def solve_jowr_batch(
 ) -> JOWRResult:
     """Solve every instance of ``batch`` in one vmapped program.
 
-    ``banks`` is either a list of per-instance banks (stacked internally), a
-    pre-stacked bank with ``a``/``b`` of shape [B, W], or a single bank
-    (shape [W]) broadcast to every instance.  ``phi0``/``lam0``, when given,
-    must carry a leading instance axis.  Returns a ``JOWRResult`` whose
-    fields are stacked over instances: ``lam`` [B, W], ``phi``
-    [B, W, Nb, Nb], ``utility_traj`` [B, T], ``lam_traj`` [B, T, W].
+    Legacy shim over :func:`run_batch` (same banks/overrides contract).
+    Returns a ``JOWRResult`` whose fields are stacked over instances:
+    ``lam`` [B, W], ``phi`` [B, W, Nb, Nb], ``utility_traj`` [B, T],
+    ``lam_traj`` [B, T, W].
     """
-    if not isinstance(banks, UtilityBank):
-        banks = stack_banks(list(banks))
-
-    def one(graph, bank, phi0, lam0):
-        return solve_jowr(graph, bank, lam_total, method=method,
-                          cost_name=cost_name, delta=delta,
-                          eta_outer=eta_outer, eta_inner=eta_inner,
-                          outer_iters=outer_iters, inner_iters=inner_iters,
-                          phi0=phi0, lam0=lam0)
-
-    in_axes = (0, _bank_axis(banks),
-               None if phi0 is None else 0,
-               None if lam0 is None else 0)
-    return jax.vmap(one, in_axes=in_axes)(
-        batch.stacked_graph(), banks, phi0, lam0)
+    config = SolverConfig.from_legacy(method=method, delta=delta,
+                                      eta_outer=eta_outer,
+                                      eta_inner=eta_inner,
+                                      inner_iters=inner_iters)
+    res = run_batch(batch, banks, lam_total, config, iters=outer_iters,
+                    cost=cost_name, phi0=phi0, lam0=lam0)
+    return JOWRResult.from_result(res)
 
 
 def solve_routing_batch(

@@ -69,4 +69,9 @@ REGISTRY = {c.name: c for c in (EXP, MM1, LINEAR, QUADRATIC)}
 
 
 def get(name: str) -> CostFn:
-    return REGISTRY[name]
+    try:
+        return REGISTRY[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown cost {name!r}: registered costs are "
+            f"{sorted(REGISTRY)}") from None

@@ -31,8 +31,9 @@ Trace (or re-jit) inside the override when you need the kernel path.
 A second, orthogonal axis is the **representation** (DESIGN.md §12): past
 :func:`use_sparse`'s (N, density) policy, :func:`maybe_sparsify` converts
 a dense ``CECGraph`` to the O(E) ``CECGraphSparse`` edge-list layout at
-the solver entry points (``solve_routing``, ``gs_oma``/``omad``,
-``CECRouter``).  Conversion is Python-level only — tracer inputs pass
+the solver core's single conversion point (``Problem.canonical``,
+core/problem.py — every entry point routes through it) and at the raw
+routing oracle ``solve_routing``.  Conversion is Python-level only — tracer inputs pass
 through untouched — and :func:`state_key` covers both axes so cached
 jitted control steps retrace under either override.
 """

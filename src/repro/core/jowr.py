@@ -1,20 +1,23 @@
 """High-level JOWR API — the paper's contribution behind one call.
 
-``solve_jowr`` is the composable entry point used by examples, benchmarks
-and the serving engine's CEC router: pick a topology, a cost model, a
-(black-box) utility bank, and a method.
+``solve_jowr`` is the legacy composable entry point used by examples,
+benchmarks and the serving engine's CEC router: pick a topology, a cost
+model, a (black-box) utility bank, and a method.  It is a shim — the
+equivalent first-class call is::
+
+    problem = Problem.create(graph, bank, lam_total=..., cost=cost_name)
+    result = solver.run(problem, SolverConfig(method=..., ...), iters=T)
+
+(see ``core/solver.py`` and DESIGN.md §13).
 """
 from __future__ import annotations
 
-from typing import Literal
-
-from . import costs as _costs
-from .allocation import JOWRResult, gs_oma
+from . import solver as _solver
+from .allocation import JOWRResult
 from .graph import CECGraph
-from .single_loop import omad
+from .problem import Problem, resolve_cost
+from .solver import METHODS, Method, SolverConfig
 from .utility import UtilityBank
-
-Method = Literal["nested", "single"]
 
 
 def solve_jowr(
@@ -32,14 +35,16 @@ def solve_jowr(
     phi0=None,
     lam0=None,
 ) -> JOWRResult:
-    cost = _costs.get(cost_name)
-    if method == "nested":
-        return gs_oma(graph, cost, bank, lam_total, delta=delta,
-                      eta_outer=eta_outer, eta_inner=eta_inner,
-                      outer_iters=outer_iters, inner_iters=inner_iters,
-                      phi0=phi0, lam0=lam0)
-    if method == "single":
-        return omad(graph, cost, bank, lam_total, delta=delta,
-                    eta_outer=eta_outer, eta_inner=eta_inner,
-                    outer_iters=outer_iters, phi0=phi0, lam0=lam0)
-    raise ValueError(method)
+    if method not in METHODS:
+        raise ValueError(
+            f"unknown method {method!r}: valid methods are {METHODS} "
+            f"(\"nested\" = GS-OMA Alg. 1, \"single\" = OMAD Alg. 3)")
+    problem = Problem(graph=graph, bank=bank, lam_total=lam_total,
+                      cost=resolve_cost(cost_name))
+    config = SolverConfig.from_legacy(method=method, delta=delta,
+                                      eta_outer=eta_outer,
+                                      eta_inner=eta_inner,
+                                      inner_iters=inner_iters)
+    res = _solver.run(problem, config, iters=outer_iters, phi0=phi0,
+                      lam0=lam0)
+    return JOWRResult.from_result(res)

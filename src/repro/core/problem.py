@@ -1,0 +1,136 @@
+"""The problem half of the solver core: what is being optimized (DESIGN.md §13).
+
+A :class:`Problem` is the immutable description of one JOWR instance —
+the augmented graph (dense ``CECGraph`` or edge-list ``CECGraphSparse``),
+the (possibly hidden) task-utility bank, the link-cost model and the
+total admitted demand λ.  Every entry point in this repo — ``solve_jowr``
+/ ``gs_oma`` / ``omad``, the batched ensemble solvers, ``run_scenario``'s
+segments and the serving ``CECRouter`` — builds a ``Problem`` and hands
+it to the one functional engine in ``core/solver.py``
+(``init``/``step``/``run``); there is no second place where "what the
+solver optimizes" is declared.
+
+Design points:
+
+* **Pytree**: ``graph``/``bank``/``lam_total`` are leaves, so a
+  ``Problem`` passes through ``jax.jit``/``jax.vmap`` directly — the
+  scenario engine re-traces nothing on demand shifts (``lam_total`` is a
+  traced scalar, never a closure constant) and the batched engine vmaps
+  one ``Problem`` whose leaves carry the instance axis.
+* **Cost is static**: a :class:`CostFn` is a registry singleton of
+  Python callables — part of the trace, not the data.  Build from a name
+  via :func:`resolve_cost`, which raises listing the registry on a typo.
+* **Representation handled once**: :meth:`Problem.canonical` applies the
+  ``dispatch.maybe_sparsify`` (N, density) policy, so the dense↔sparse
+  decision lives here instead of being re-implemented by each entry
+  point (as ``gs_oma`` and ``CECRouter.__post_init__`` once did).
+* **Fail fast**: :meth:`Problem.validate` checks the cross-field
+  invariants (session counts, demand positivity) at construction time —
+  shape errors surface with a message, not as a trace-time explosion.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+
+from . import costs as _costs
+from . import dispatch
+from .costs import CostFn
+from .graph import CECGraph, CECGraphSparse
+from .utility import UtilityBank
+
+
+def resolve_cost(cost: CostFn | str) -> CostFn:
+    """A :class:`CostFn` from a registry name (or pass one through).
+
+    Unknown names raise a ``KeyError`` that lists what *is* registered —
+    ``costs.REGISTRY`` is open for extension, and "exp" vs "expo" typos
+    should not surface as a bare KeyError with no context.
+    """
+    if isinstance(cost, CostFn):
+        return cost
+    return _costs.get(cost)   # raises listing the registry on a typo
+
+
+# fields passed explicitly: the metadata-inferring decorator form needs
+# jax >= 0.4.36, and the CI matrix keeps a 0.4.30 leg
+@functools.partial(jax.tree_util.register_dataclass,
+                   data_fields=("graph", "bank", "lam_total"),
+                   meta_fields=("cost",))
+@dataclasses.dataclass(frozen=True)
+class Problem:
+    """One JOWR instance: graph + utility bank + cost model + demand.
+
+    ``bank`` may be ``None`` for measured-utility operation (the serving
+    router observes task utilities out-of-band and injects them into
+    ``solver.step``); ``solver.run`` requires a bank — it has nobody else
+    to ask.  ``lam_total`` is a pytree *leaf* (python float or jnp
+    scalar) so jitted consumers treat demand as data.
+    """
+
+    graph: CECGraph | CECGraphSparse
+    bank: UtilityBank | None = None
+    lam_total: jax.Array | float = 0.0
+    cost: CostFn = dataclasses.field(
+        default=_costs.EXP, metadata=dict(static=True))
+
+    @classmethod
+    def create(cls, graph, bank=None, *, lam_total, cost="exp") -> "Problem":
+        """Validated constructor; ``cost`` may be a registry name."""
+        return cls(graph=graph, bank=bank, lam_total=lam_total,
+                   cost=resolve_cost(cost)).validate()
+
+    # -- invariants ----------------------------------------------------------
+    def validate(self) -> "Problem":
+        """Check cross-field invariants; returns ``self`` for chaining.
+
+        Only Python-level (static) facts are checked — the method is safe
+        to call on tracer-carrying problems inside jit/vmap.
+        """
+        if not isinstance(self.graph, (CECGraph, CECGraphSparse)):
+            raise TypeError(
+                f"Problem.graph must be a CECGraph or CECGraphSparse, got "
+                f"{type(self.graph).__name__}")
+        if not isinstance(self.cost, CostFn):
+            raise TypeError(
+                f"Problem.cost must be a CostFn (see costs.REGISTRY), got "
+                f"{type(self.cost).__name__}")
+        W = self.graph.n_sessions
+        if self.bank is not None and self.bank.a.shape[-1] != W:
+            raise ValueError(
+                f"utility bank is for {self.bank.a.shape[-1]} sessions but "
+                f"the graph serves W={W}")
+        if not isinstance(self.lam_total, jax.core.Tracer):
+            import numpy as np
+
+            lt = np.asarray(self.lam_total)
+            if lt.ndim == 0 and not lt > 0:
+                raise ValueError(f"lam_total must be positive, got {lt}")
+        return self
+
+    # -- representation ------------------------------------------------------
+    def canonical(self, *companions) -> "Problem":
+        """Apply the dense↔sparse representation policy exactly once.
+
+        Returns ``self`` unchanged below the ``dispatch.use_sparse``
+        threshold, under jit (tracer leaves), or when any ``companion``
+        array (a caller's φ⁰ that would need re-layout) is a tracer;
+        otherwise returns a new ``Problem`` on the ``CECGraphSparse``
+        edge-list representation.  This is the single conversion point
+        all entry points share.
+        """
+        graph = dispatch.maybe_sparsify(self.graph, *companions)
+        if graph is self.graph:
+            return self
+        return dataclasses.replace(self, graph=graph)
+
+    # -- conveniences --------------------------------------------------------
+    @property
+    def n_sessions(self) -> int:
+        return self.graph.n_sessions
+
+    def with_demand(self, lam_total) -> "Problem":
+        """Same instance under a new total demand (a leaf — no retrace)."""
+        return dataclasses.replace(self, lam_total=lam_total)

@@ -131,9 +131,10 @@ def oracle_observe(graph: CECGraph, cost: CostFn, lam: Array, phi: Array,
     4): the routing iterate advances ``n_iters`` mirror-descent steps for
     the admitted allocation, then the network cost D(Λ, φ') at the
     *post-update* iterate is what the controller's scalar feedback is built
-    from.  Returns (φ', D).  Both `gs_oma`/`control_step`
-    (core/allocation.py) and the serving router observe through here, so
-    there is exactly one definition of "what an observation does to φ".
+    from.  Returns (φ', D).  Every observation of the solver core's fused
+    control iteration (``core.solver.step`` — offline scans, batched
+    ensembles and the serving router alike) goes through here, so there
+    is exactly one definition of "what an observation does to φ".
     """
     phi, _ = solve_routing(graph, cost, lam, phi, eta, n_iters)
     return phi, total_cost(graph, cost, phi, lam)

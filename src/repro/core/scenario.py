@@ -41,8 +41,8 @@ from repro.topo.churn import rewire_links
 from . import costs as _costs
 from .batch import CECGraphBatch, pad_graph, stack_banks
 from .graph import CECGraph, InfeasibleTopology, build_augmented, draw_instance
-from .jowr import Method
 from .routing import warm_start_phi
+from .solver import Method, SolverConfig, SolverState, project_box_simplex
 from .utility import UtilityBank, make_bank
 
 Array = jnp.ndarray
@@ -322,22 +322,19 @@ class ScenarioResult(NamedTuple):
 
 
 @functools.lru_cache(maxsize=None)
-def _segment_solver(method: Method, cost_name: str, delta: float,
-                    eta_outer: float, eta_inner: float, outer_iters: int,
-                    inner_iters: int):
+def _segment_solver(config: SolverConfig, cost_name: str, outer_iters: int):
     """One jitted batched segment solve, cached on its static knobs.
 
     ``lam_total`` is a traced scalar argument (not a closure constant) so
-    demand shifts reuse the same executable.
+    demand shifts reuse the same executable; the carried iterates enter
+    and leave as a stacked ``SolverState`` (``None`` for the cold first
+    segment).
     """
-    from .batch import solve_jowr_batch
+    from .batch import run_batch
 
-    def fn(batch, banks, lam_total, phi0, lam0):
-        return solve_jowr_batch(
-            batch, banks, lam_total, method=method, cost_name=cost_name,
-            delta=delta, eta_outer=eta_outer, eta_inner=eta_inner,
-            outer_iters=outer_iters, inner_iters=inner_iters,
-            phi0=phi0, lam0=lam0)
+    def fn(batch, banks, lam_total, state):
+        return run_batch(batch, banks, lam_total, config,
+                         iters=outer_iters, cost=cost_name, state=state)
 
     return jax.jit(fn)
 
@@ -353,39 +350,50 @@ def run_scenario(
     eta_inner: float = 3.0,
     inner_iters: int = 1,
     explore: float = 0.1,
+    config: SolverConfig | None = None,
 ) -> ScenarioResult:
     """Advance the online solver through the scenario's segments.
 
-    Returns stacked trajectories over the full horizon: the utility trace
-    crosses every event with warm-started iterates, which is what the
-    dynamic-regret / recovery metrics (:func:`scenario_metrics`) measure.
-    An event-free scenario is exactly one batched ``solve_jowr`` (the
-    static engine) — asserted to machine precision in the tests.
+    The solver core's :class:`SolverState` is threaded across segment
+    boundaries (warm-started at each event: φ through
+    ``routing.warm_start_phi``, Λ rescaled and re-projected), so what
+    crosses an event is exactly what the engine would carry — no raw
+    ``(lam, phi)`` tuple plumbing.  Pass ``config`` (a ``SolverConfig``)
+    to use the first-class API; the individual keyword knobs are the
+    legacy surface and are ignored when ``config`` is given.  Returns
+    stacked trajectories over the full horizon, which is what the
+    dynamic-regret / recovery metrics (:func:`scenario_metrics`)
+    measure.  An event-free scenario is exactly one batched
+    ``solve_jowr`` (the static engine) — asserted to machine precision
+    in the tests.
     """
-    from .allocation import _project_box_simplex
-
+    if config is None:
+        config = SolverConfig(method=method, delta=float(delta),
+                              eta_outer=float(eta_outer),
+                              eta_inner=float(eta_inner),
+                              inner_iters=int(inner_iters))
     segments = compile_segments(scenario, seeds)
-    phi = lam = None
+    state: SolverState | None = None
     u_trajs, lam_trajs = [], []
     for k, seg in enumerate(segments):
         if k > 0:
             prev = segments[k - 1]
             if any(e.changes_graph for e in seg.events):
-                phi = warm_start_phi(phi, seg.batch.out_mask, explore)
+                state = state._replace(phi=warm_start_phi(
+                    state.phi, seg.batch.out_mask, explore))
             if seg.lam_total != prev.lam_total:
-                lam = lam * (seg.lam_total / prev.lam_total)
-                lam = _project_box_simplex(lam, seg.lam_total, delta)
-        solve = _segment_solver(method, cost_name, delta, eta_outer,
-                                eta_inner, seg.n_iters, inner_iters)
-        res = solve(seg.batch, seg.banks, jnp.float32(seg.lam_total),
-                    phi, lam)
-        phi, lam = res.phi, res.lam
+                lam = state.lam * (seg.lam_total / prev.lam_total)
+                lam = project_box_simplex(lam, seg.lam_total, config.delta)
+                state = state._replace(lam=lam)
+        solve = _segment_solver(config, cost_name, seg.n_iters)
+        res = solve(seg.batch, seg.banks, jnp.float32(seg.lam_total), state)
+        state = res.state
         u_trajs.append(res.utility_traj)
         lam_trajs.append(res.lam_traj)
     return ScenarioResult(
         utility_traj=jnp.concatenate(u_trajs, axis=1),
         lam_traj=jnp.concatenate(lam_trajs, axis=1),
-        lam=lam, phi=phi, segments=segments)
+        lam=state.lam, phi=state.phi, segments=segments)
 
 
 # ---------------------------------------------------------------------------

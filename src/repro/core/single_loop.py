@@ -4,12 +4,18 @@ Identical control flow to GS-OMA except the oracle is invoked with K = 1:
 every utility observation advances the shared routing iterate φ̃ by exactly
 one online-mirror-descent step, so allocation (ascent) and routing (descent)
 move simultaneously through the concave–convex saddle landscape (eq. (25)).
+
+Shim: ``omad(...)`` ≡ ``solver.run(problem, SolverConfig(method="single",
+...), iters=T)`` — ``method="single"`` *is* the K=1 oracle.
 """
 from __future__ import annotations
 
-from .allocation import JOWRResult, gs_oma
+from . import solver as _solver
+from .allocation import JOWRResult
 from .costs import CostFn
 from .graph import CECGraph
+from .problem import Problem
+from .solver import SolverConfig
 from .utility import UtilityBank
 
 
@@ -26,8 +32,10 @@ def omad(
     phi0=None,
     lam0=None,
 ) -> JOWRResult:
-    return gs_oma(
-        graph, cost, bank, lam_total,
-        delta=delta, eta_outer=eta_outer, eta_inner=eta_inner,
-        outer_iters=outer_iters, inner_iters=1, phi0=phi0, lam0=lam0,
-    )
+    problem = Problem(graph=graph, bank=bank, lam_total=lam_total, cost=cost)
+    config = SolverConfig.from_legacy(method="single", delta=delta,
+                                      eta_outer=eta_outer,
+                                      eta_inner=eta_inner, inner_iters=1)
+    res = _solver.run(problem, config, iters=outer_iters, phi0=phi0,
+                      lam0=lam0)
+    return JOWRResult.from_result(res)

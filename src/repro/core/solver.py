@@ -1,0 +1,390 @@
+"""The solver half of the core: one functional engine (DESIGN.md §13).
+
+Optax-style API over :class:`~repro.core.problem.Problem`:
+
+    state = init(problem, config)                     # SolverState (Λ, φ, t)
+    state, info = step(problem, config, state, u)     # one outer iteration
+    result = run(problem, config, iters=T)            # scanned, jit-friendly
+
+``step`` is the paper's fused control iteration (GS-OMA Alg. 1; with
+``method="single"`` the oracle runs K=1 and the same code *is* OMAD,
+Alg. 3): a ``lax.scan`` over the 2W perturbed observations (each one
+oracle invocation, ``routing.oracle_observe``), the two-point gradient
+estimate, online mirror ascent on the scaled simplex (eq. (10)), the
+exact box-simplex projection, and a final observation at the committed
+allocation.  This is the **only** implementation of that update in the
+repo: ``gs_oma``/``omad``/``solve_jowr`` delegate to :func:`run`, the
+batched ensemble solvers ``jax.vmap`` it, ``run_scenario`` threads
+:class:`SolverState` across its segments, and the serving ``CECRouter``
+holds a ``SolverState`` and calls the jitted :func:`fused_step`.
+
+Task utilities enter ``step`` as a precomputed [2W] vector in the row
+order of :func:`perturbed_allocations` — a closed-form bank evaluates
+them under vmap inside the jit (what :func:`run` does), a serving fleet
+measures them out-of-band and injects the observations (what the router
+does); the solver cannot tell the difference.
+
+:class:`SolverConfig` carries every hyperparameter that used to be
+re-declared as keyword soup by each entry point.  The two named presets
+document a divergence that previously lived as silently drifted
+defaults: :func:`paper_defaults` (the offline evaluation setup,
+``eta_inner=0.05``) vs :func:`serving_defaults` (the live router,
+``eta_inner=3.0`` with K=1 — the aggressive single-step oracle the
+serving plane has always run).  ``configs/cec_paper.py`` exposes the
+paper §IV scenario as a third preset.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Literal, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from . import dispatch
+from .graph import CECGraphSparse, SparsePhi
+from .problem import Problem
+from .routing import oracle_observe
+
+Array = jnp.ndarray
+
+Method = Literal["nested", "single"]
+METHODS = ("nested", "single")
+
+
+# ---------------------------------------------------------------------------
+# configuration
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class SolverConfig:
+    """Hyperparameters of the GS-OMA/OMAD engine (hashable, jit-static).
+
+    ``method="single"`` is OMAD: the oracle advances φ exactly one
+    mirror-descent step per observation regardless of ``inner_iters``
+    (:attr:`oracle_iters` is the resolved count).  ``eta_inner`` must be
+    a Python float — it is a static parameter of the Pallas kernel path
+    (DESIGN.md §9.2).
+    """
+
+    method: Method = "single"
+    delta: float = 0.5            # two-point perturbation radius (Alg. 1)
+    eta_outer: float = 0.05       # mirror-ascent step on Λ (eq. (10))
+    eta_inner: float = 0.05       # OMD-RT step on φ (eq. (22))
+    inner_iters: int = 50         # oracle steps per observation (nested)
+
+    def __post_init__(self):
+        if self.method not in METHODS:
+            raise ValueError(
+                f"unknown method {self.method!r}: valid methods are "
+                f"{METHODS}")
+        if not self.delta > 0:
+            raise ValueError(f"delta must be positive, got {self.delta}")
+        if self.inner_iters < 1:
+            raise ValueError(
+                f"inner_iters must be >= 1, got {self.inner_iters}")
+
+    @property
+    def oracle_iters(self) -> int:
+        """Routing steps per observation: 1 for OMAD, else ``inner_iters``."""
+        return 1 if self.method == "single" else self.inner_iters
+
+    def replace(self, **kw) -> "SolverConfig":
+        return dataclasses.replace(self, **kw)
+
+    @classmethod
+    def from_legacy(cls, *, method: str = "nested", delta: float,
+                    eta_outer: float, eta_inner: float,
+                    inner_iters: int) -> "SolverConfig":
+        """A config from the pre-§13 keyword soup (the shims' adapter)."""
+        return cls(method=method, delta=float(delta),
+                   eta_outer=float(eta_outer), eta_inner=float(eta_inner),
+                   inner_iters=int(inner_iters))
+
+
+def paper_defaults() -> SolverConfig:
+    """The published offline defaults (`solve_jowr`/`gs_oma` signatures):
+    nested loop, gentle inner step η_inner=0.05, K=50 oracle steps."""
+    return SolverConfig(method="nested", delta=0.5, eta_outer=0.05,
+                        eta_inner=0.05, inner_iters=50)
+
+
+def serving_defaults() -> SolverConfig:
+    """The live control plane's defaults (`CECRouter`): single-loop OMAD
+    with the aggressive η_inner=3.0 single-step oracle.
+
+    The η_inner divergence from :func:`paper_defaults` is intentional,
+    not drift: with K=1 the routing iterate gets exactly one
+    exponentiated-gradient step per observation, so the serving plane
+    runs it hot (3.0) to track churn, while the nested offline solver
+    takes many small steps (0.05) per observation toward the oracle
+    fixed point.
+    """
+    return SolverConfig(method="single", delta=0.5, eta_outer=0.05,
+                        eta_inner=3.0, inner_iters=1)
+
+
+# ---------------------------------------------------------------------------
+# state / results
+# ---------------------------------------------------------------------------
+
+class SolverState(NamedTuple):
+    """The engine's carried iterates — a pytree; stack it to batch."""
+
+    lam: Array                    # [W] allocation Λ^t
+    phi: Any                      # [W, Nb, Nb] dense, or a SparsePhi
+    t: Array                      # scalar int32 outer-iteration counter
+
+
+class StepInfo(NamedTuple):
+    """Diagnostics of one outer iteration."""
+
+    grad: Array                   # [W] two-point gradient estimate ĝ^t
+    cost: Array                   # scalar D(Λ^{t+1}, φ^{t+1})
+
+
+class Result(NamedTuple):
+    """Unified solve record (supersedes ``JOWRResult``/``ControlStep``/
+    the router's ad-hoc history dicts; the legacy shims project it back
+    onto those shapes)."""
+
+    lam: Array                    # [W] final allocation
+    phi: Any                      # [W, Nb, Nb] (or SparsePhi) final routing
+    utility_traj: Array           # [T] observed U(Λ^t, φ^t)
+    lam_traj: Array               # [T, W]
+    cost_traj: Array              # [T] network cost at the committed iterates
+    grad_traj: Array              # [T, W] gradient estimates
+    state: SolverState            # final state — thread into the next run
+
+
+# ---------------------------------------------------------------------------
+# the exact box-simplex projection (Alg. 1 line 9)
+# ---------------------------------------------------------------------------
+
+def project_box_simplex(lam: Array, lam_total, delta: float) -> Array:
+    """Exact projection onto {δ ≤ λ_w ≤ λ−δ, Σλ_w = λ}.
+
+    Euclidean projection in closed form: x = clip(y − τ*, δ, λ−δ) where τ*
+    solves Σ_w x_w(τ) = λ.  The sum is piecewise linear and non-increasing
+    in τ with breakpoints {y_w − δ, y_w − (λ−δ)}; sorting the 2W
+    breakpoints and interpolating on the bracketing segment gives the exact
+    τ* (water-filling on the dual), no iterative tolerance involved.  For
+    infeasible targets (λ outside [Wδ, W(λ−δ)]) the clip saturates at the
+    nearest box vertex.
+
+    Last-axis semantics so stacked ``[B, W]`` iterates (the scenario
+    engine's per-instance rows) project exactly like a single ``[W]``.
+    """
+    lo, hi = delta, lam_total - delta
+    y = jnp.asarray(lam)
+    bp = jnp.sort(jnp.concatenate([y - lo, y - hi], axis=-1), -1)  # [..., 2W]
+    # Σ clip(y − τ) evaluated at every breakpoint: non-increasing in τ,
+    # from W·(λ−δ) at bp[0] down to W·δ at bp[-1].
+    s = jnp.clip(y[..., None, :] - bp[..., :, None], lo, hi).sum(-1)
+    # bracketing segment: largest k with s_k ≥ λ (linear on [bp_k, bp_k+1])
+    k = jnp.clip((s >= lam_total).sum(-1, keepdims=True) - 1,
+                 0, bp.shape[-1] - 2)
+    t0 = jnp.take_along_axis(bp, k, -1)
+    t1 = jnp.take_along_axis(bp, k + 1, -1)
+    s0 = jnp.take_along_axis(s, k, -1)
+    s1 = jnp.take_along_axis(s, k + 1, -1)
+    drop = jnp.where(s0 > s1, s0 - s1, 1.0)
+    frac = jnp.where(s0 > s1, (s0 - lam_total) / drop, 0.0)
+    tau = t0 + frac * (t1 - t0)
+    return jnp.clip(y - tau, lo, hi)
+
+
+# ---------------------------------------------------------------------------
+# perturbation basis — THE observation order
+# ---------------------------------------------------------------------------
+
+def _perturbation_basis(W: int) -> tuple[Array, Array]:
+    """([2W] signs, [2W, W] directions) shared by
+    :func:`perturbed_allocations` (which callers use to evaluate task
+    utilities up front) and :func:`step`'s observation scan (which pairs
+    those utilities positionally): rows (2w, 2w+1) are (+e_w, −e_w)."""
+    signs = jnp.tile(jnp.asarray([1.0, -1.0], jnp.float32), W)
+    dirs = jnp.repeat(jnp.eye(W, dtype=jnp.float32), 2, axis=0)
+    return signs, dirs
+
+
+def perturbed_allocations(lam: Array, delta: float) -> Array:
+    """[2W, W] admissions of one outer iteration: rows (2w, 2w+1) = Λ ± δ·e_w.
+
+    The row order is the observation order of :func:`step`'s scan (see
+    :func:`_perturbation_basis`).  Callers evaluate task utilities over
+    these rows up front — under vmap for a closed-form bank, or batched
+    through a measured-utility callback for a live fleet (the 2W
+    admissions depend only on Λ^t, never on φ).
+    """
+    signs, dirs = _perturbation_basis(lam.shape[-1])
+    return lam + signs[:, None] * delta * dirs
+
+
+# ---------------------------------------------------------------------------
+# init / step / run
+# ---------------------------------------------------------------------------
+
+def init(problem: Problem, config: SolverConfig, *,
+         phi0=None, lam0: Array | None = None) -> SolverState:
+    """Fresh iterates: uniform allocation, uniform routing, t=0.
+
+    ``phi0``/``lam0`` override the warm start.  A dense ``phi0`` handed
+    to a sparse-graph problem is re-laid-out onto the edge slots here —
+    the one conversion point (callers never juggle representations).
+    Λ is seeded strong-float32 so device-resident consumers (the serving
+    router) never retrace when the first update replaces a weak-typed
+    seed.
+    """
+    graph = problem.graph
+    W = graph.n_sessions
+    if lam0 is None:
+        lam = jnp.full((W,), problem.lam_total / W, jnp.float32)
+    else:
+        lam = jnp.asarray(lam0, jnp.float32)
+    if phi0 is None:
+        phi = graph.uniform_phi()
+    elif isinstance(graph, CECGraphSparse) and not isinstance(phi0, SparsePhi):
+        from . import sparse as _sparse
+
+        phi = _sparse.phi_to_sparse(graph, phi0)
+    else:
+        phi = phi0
+    return SolverState(lam=lam, phi=phi, t=jnp.int32(0))
+
+
+def step(problem: Problem, config: SolverConfig, state: SolverState,
+         task_utilities: Array) -> tuple[SolverState, StepInfo]:
+    """One fused outer iteration of GS-OMA/OMAD on the current iterates.
+
+    ``task_utilities`` is the [2W] vector of *task* utilities Σ_w u_w(λ_w)
+    observed for the perturbed admissions of :func:`perturbed_allocations`
+    (same row order); the network-cost half of each observation is computed
+    here, at the routing iterate the oracle reached for that admission.
+    The scan carries φ through all 2W observations (one oracle invocation
+    each), takes the mirror-ascent step, projects exactly onto the
+    box-simplex, then observes once more at the committed allocation so
+    the returned (Λ, φ, cost) are mutually consistent — the paper's
+    U(Λ^t, φ^t).  Pure traceable JAX: :func:`run` scans it, the batch
+    engine vmaps it, :func:`fused_step` jits it for the serving router.
+    """
+    graph, cost = problem.graph, problem.cost
+    lam, phi = state.lam, state.phi
+    lam_total = problem.lam_total
+    delta, eta_inner = config.delta, config.eta_inner
+    K = config.oracle_iters
+    W = graph.n_sessions
+    signs, dirs = _perturbation_basis(W)
+
+    def observe(carry, inp):
+        g, phi = carry
+        sign, ew, task_u = inp
+        lam_p = lam + sign * delta * ew
+        phi, D = oracle_observe(graph, cost, lam_p, phi, eta_inner, K)
+        g = g + sign * ((task_u - D) / (2.0 * delta)) * ew  # Alg. 1 line 6
+        return (g, phi), None
+
+    (g, phi), _ = jax.lax.scan(observe, (jnp.zeros(W), phi),
+                               (signs, dirs, task_utilities))
+    # online mirror ascent on the scaled simplex (eq. (10))
+    z = config.eta_outer * g
+    z = z - z.max()
+    w = lam * jnp.exp(z)
+    lam_new = lam_total * w / w.sum()
+    lam_new = project_box_simplex(lam_new, lam_total, delta)
+    phi, D = oracle_observe(graph, cost, lam_new, phi, eta_inner, K)
+    return (SolverState(lam=lam_new, phi=phi, t=state.t + 1),
+            StepInfo(grad=g, cost=D))
+
+
+def run(problem: Problem, config: SolverConfig, *, iters: int,
+        state: SolverState | None = None,
+        phi0=None, lam0: Array | None = None) -> Result:
+    """Scan :func:`step` for ``iters`` outer iterations.
+
+    Requires ``problem.bank`` (closed-form task utilities evaluated under
+    vmap inside the scan — measured-utility consumers drive :func:`step`
+    directly).  With ``state=None`` the representation policy runs once
+    (``Problem.canonical``) and iterates come from :func:`init`; a passed
+    ``state`` continues exactly where a previous ``run`` stopped
+    (``Result.state``), which is how the scenario engine crosses segment
+    boundaries.  A dense problem that auto-sparsifies still returns dense
+    ``phi``/``state`` — the representation never leaks to the caller.
+    """
+    bank = problem.bank
+    if bank is None:
+        raise ValueError(
+            "solver.run needs problem.bank for task utilities; "
+            "measured-utility consumers (no bank) drive solver.step with "
+            "observed [2W] vectors instead")
+    if state is not None and (phi0 is not None or lam0 is not None):
+        raise ValueError(
+            "pass either state= (continue a previous run) or phi0=/lam0= "
+            "(fresh warm-started iterates), not both — to override part of "
+            "a carried state, edit it: state._replace(phi=...)")
+    dense_in = problem.graph
+    if state is None:
+        prob = problem.canonical(phi0, lam0).validate()
+        st = init(prob, config, phi0=phi0, lam0=lam0)
+    else:
+        # continuations re-run the representation policy too — a carried
+        # dense state must not silently pin a fleet-scale solve to the
+        # O(N²) path (the carried φ is re-laid-out onto the edge slots,
+        # exactly like a phi0 warm start)
+        prob = problem.canonical(state.lam,
+                                 *jax.tree_util.tree_leaves(state.phi))
+        prob, st = prob.validate(), state
+        if (isinstance(prob.graph, CECGraphSparse)
+                and not isinstance(st.phi, SparsePhi)):
+            from . import sparse as _sparse
+
+            st = st._replace(phi=_sparse.phi_to_sparse(prob.graph, st.phi))
+    converted = prob.graph is not dense_in
+
+    def outer(st, _):
+        task_u = jax.vmap(bank.total)(
+            perturbed_allocations(st.lam, config.delta))
+        st, info = step(prob, config, st, task_u)
+        # the recorded U_t is the paper's U(Λ^t, φ^t): task utility and
+        # network cost both evaluated at the *committed* iterates, not at
+        # the last perturbed observation
+        U_t = bank.total(st.lam) - info.cost
+        return st, (U_t, st.lam, info.cost, info.grad)
+
+    st, (u_traj, lam_traj, cost_traj, grad_traj) = jax.lax.scan(
+        outer, st, None, length=iters)
+    if converted:
+        from . import sparse as _sparse
+
+        st = st._replace(phi=_sparse.phi_to_dense(prob.graph, st.phi))
+    return Result(lam=st.lam, phi=st.phi, utility_traj=u_traj,
+                  lam_traj=lam_traj, cost_traj=cost_traj,
+                  grad_traj=grad_traj, state=st)
+
+
+# ---------------------------------------------------------------------------
+# the jitted step for device-resident consumers (the serving router)
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=None)
+def _fused_step(config: SolverConfig, _dispatch_key):
+    def fn(problem: Problem, state: SolverState, task_utilities: Array):
+        return step(problem, config, state, task_utilities)
+
+    return jax.jit(fn)
+
+
+def fused_step(config: SolverConfig):
+    """``jit(step)`` with ``config`` static, cached on its knobs.
+
+    Returns ``fn(problem, state, task_utilities) -> (SolverState,
+    StepInfo)``.  ``problem`` and ``state`` are pytree arguments, so
+    same-shape topology changes (the scenario engine's stable-index
+    churn) reuse the compiled executable and demand shifts
+    (``problem.lam_total`` — a traced leaf) never retrace.  The cache is
+    additionally keyed on ``dispatch.state_key()`` so tracing inside
+    ``dispatch.kernel_dispatch``/``sparse_dispatch`` gets a fresh trace
+    instead of a stale one (DESIGN.md §11).
+    """
+    return _fused_step(config, dispatch.state_key())

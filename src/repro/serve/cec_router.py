@@ -1,12 +1,15 @@
 """CEC router: the paper's control plane driving live serving decisions.
 
-The router owns the JOWR state (Λ, φ) for a fleet of edge devices, each
-hosting one model version, and keeps it *device-resident*: every control
-interval is one jitted fused call — ``core.allocation.fused_control_step``,
-the exact scan body ``gs_oma`` runs — covering all 2W perturbed
-observations, the mirror-ascent/projection update, and the committed
-observation, with no per-session Python loop and no solver math of its
-own.  Each interval it:
+The router is a thin stateful holder over the solver core (DESIGN.md
+§13): a :class:`~repro.core.problem.Problem` (graph + cost + demand, no
+bank — utilities are *measured*), a :class:`~repro.core.solver.
+SolverConfig` (``solver.serving_defaults()`` unless overridden), and a
+device-resident :class:`~repro.core.solver.SolverState` (Λ, φ, t).
+Every control interval is one jitted fused call —
+``core.solver.fused_step``, the exact ``step`` the offline solvers scan
+— covering all 2W perturbed observations, the mirror-ascent/projection
+update, and the committed observation, with no per-session Python loop
+and no solver math of its own.  Each interval it:
 
  1. admits the 2W perturbed allocations Λ ± δ·e_w and collects their
     *measured* task utilities through the utility callback (batched in one
@@ -25,7 +28,10 @@ engine's event stream directly (``apply_scenario_event``, DESIGN.md §10):
 the same declarative events that drive offline scenario sweeps drive the
 live control plane, and because the scenario engine keeps the node-index
 space stable (dead node == isolated index), same-shape churn never
-retraces the fused step.
+retraces the fused step.  Fleet-scale graphs flip to the edge-list
+representation through the same ``Problem.canonical`` policy every other
+entry point uses, and demand shifts only swap the traced
+``Problem.lam_total`` leaf — never a retrace.
 
 The fused step runs through ``core.flow`` / ``core.routing`` and therefore
 inherits the size-based kernel dispatch (core/dispatch.py): a fleet whose
@@ -42,12 +48,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import CECGraph, CECGraphSparse, SparsePhi, propagate
-from repro.core.allocation import (_project_box_simplex, fused_control_step,
-                                   perturbed_allocations)
-from repro.core.dispatch import maybe_sparsify
+from repro.core import solver as _solver
+from repro.core.problem import Problem, resolve_cost
 from repro.core.routing import warm_start_phi
 from repro.core.scenario import (DemandShift, Event, ScenarioState,
                                  apply_event)
+from repro.core.solver import SolverConfig, SolverState, project_box_simplex
 
 
 def _call_utility(utility_fn, lams: np.ndarray) -> np.ndarray:
@@ -72,33 +78,60 @@ def _call_utility(utility_fn, lams: np.ndarray) -> np.ndarray:
 
 @dataclasses.dataclass
 class CECRouter:
-    graph: CECGraph
+    """Live control plane = ``Problem`` + ``SolverConfig`` + ``SolverState``.
+
+    Construct with a graph and either a ``config`` (the first-class API)
+    or the legacy keyword knobs, which default to
+    ``solver.serving_defaults()`` — single-loop OMAD with the hot
+    η_inner=3.0 oracle (see that preset's docstring for why serving
+    diverges from ``paper_defaults()``).
+    """
+
+    graph: CECGraph | CECGraphSparse
     lam_total: float
     delta: float = 0.5
     eta_outer: float = 0.05
     eta_inner: float = 3.0
     inner_iters: int = 1
     cost_name: str = "exp"
+    config: SolverConfig | None = None
 
     def __post_init__(self):
-        # fleet-scale graphs flip to the edge-list representation here and
-        # stay there: the fused control step then traces and serves in
-        # O(E), with φ device-resident as a SparsePhi (DESIGN.md §12)
-        self.graph = maybe_sparsify(self.graph)
-        W = self.graph.n_sessions
-        # strong dtype: a weak-typed seed would retrace the fused step once
-        # its first output (strong float32) replaces it
-        self.lam = jnp.full((W,), self.lam_total / W, jnp.float32)
-        self.phi = self.graph.uniform_phi()
+        if self.config is None:
+            # the legacy knobs, expressed as a config: K=1 is OMAD
+            method = "single" if self.inner_iters == 1 else "nested"
+            self.config = _solver.serving_defaults().replace(
+                method=method, delta=float(self.delta),
+                eta_outer=float(self.eta_outer),
+                eta_inner=float(self.eta_inner),
+                inner_iters=int(self.inner_iters))
+        else:
+            # keep the legacy attribute reads truthful
+            self.delta = self.config.delta
+            self.eta_outer = self.config.eta_outer
+            self.eta_inner = self.config.eta_inner
+            self.inner_iters = self.config.oracle_iters
+        # one Problem: representation policy + demand as a traced leaf
+        # (Problem.canonical is the same conversion every entry point uses;
+        # strong-float32 demand so the fused step never retraces on it)
+        self.problem = Problem(
+            graph=self.graph, bank=None,
+            lam_total=jnp.float32(self.lam_total),
+            cost=resolve_cost(self.cost_name)).canonical().validate()
+        self.graph = self.problem.graph
+        self.state: SolverState = _solver.init(self.problem, self.config)
         self.history: list[dict] = []
 
-    def _step_fn(self):
-        # resolved per call (lru-cached): picks up the live kernel-dispatch
-        # state instead of freezing the trace taken at construction time
-        return fused_control_step(self.cost_name, delta=self.delta,
-                                  eta_outer=self.eta_outer,
-                                  eta_inner=self.eta_inner,
-                                  inner_iters=self.inner_iters)
+    # -- the solver state, exposed under its historical names ---------------
+    @property
+    def lam(self):
+        """[W] current admission allocation Λ (device-resident)."""
+        return self.state.lam
+
+    @property
+    def phi(self):
+        """Current routing iterate (dense tensor or ``SparsePhi``)."""
+        return self.state.phi
 
     def control_step(self, utility_fn) -> dict:
         """One OMAD outer iteration, fused on device.
@@ -109,32 +142,34 @@ class CECRouter:
         perturbed admissions and once with the committed allocation (see
         :func:`_call_utility` for the batched/scalar contract).  Everything
         else — oracle invocations, gradient estimate, mirror ascent, exact
-        projection, committed observation — is a single jitted call; (Λ, φ)
-        never leave the device.
+        projection, committed observation — is a single jitted
+        ``solver.fused_step`` call; the ``SolverState`` never leaves the
+        device.
         """
-        pert = perturbed_allocations(self.lam, self.delta)
+        pert = _solver.perturbed_allocations(self.state.lam,
+                                             self.config.delta)
         task_u = jnp.asarray(_call_utility(utility_fn, np.asarray(pert)))
-        step = self._step_fn()(self.graph, self.lam, self.phi, task_u,
-                               jnp.float32(self.lam_total))
-        self.lam, self.phi = step.lam, step.phi
-        u_task = float(_call_utility(utility_fn, np.asarray(self.lam)[None])[0])
-        rec = {"lam": np.asarray(self.lam).copy(),
-               "cost": float(step.cost),
-               "utility": u_task - float(step.cost),
-               "grad": np.asarray(step.grad).copy()}
+        self.state, info = _solver.fused_step(self.config)(
+            self.problem, self.state, task_u)
+        u_task = float(
+            _call_utility(utility_fn, np.asarray(self.state.lam)[None])[0])
+        rec = {"lam": np.asarray(self.state.lam).copy(),
+               "cost": float(info.cost),
+               "utility": u_task - float(info.cost),
+               "grad": np.asarray(info.grad).copy()}
         self.history.append(rec)
         return rec
 
     # -- dispatch interfaces used by the engine ------------------------------
     def admission_split(self) -> np.ndarray:
         """P(version w) for an incoming request."""
-        lam = np.asarray(self.lam)
+        lam = np.asarray(self.state.lam)
         return lam / lam.sum()
 
     def replica_weights(self) -> np.ndarray:
         """[W, n_phys] share of version-w traffic each deployed replica
         processes = t_i(w)/λ_w at the nodes deploying w."""
-        t = np.asarray(propagate(self.graph, self.phi, self.lam))
+        t = np.asarray(propagate(self.graph, self.state.phi, self.state.lam))
         dep = np.asarray(self.graph.deploy)
         shares = t[:, : self.graph.n_phys] * dep
         tot = shares.sum(-1, keepdims=True)
@@ -148,40 +183,48 @@ class CECRouter:
         φ restarts from an exploration mix so edges that multiplicative
         updates had zeroed can be rediscovered (DESIGN.md §5, §10).  The
         new graph goes through the same representation policy as the
-        constructor.  On the sparse path the running ``SparsePhi`` is
-        first re-expressed on the new slot layout by **edge identity**
-        (``core.sparse.remap_phi`` — churn can repack CSR slots even at
-        unchanged widths, so positional reuse would scramble edges), then
-        warm-started part-wise through the same ``warm_start_phi`` row
-        math as the dense tensor."""
-        old_graph = self.graph
-        new_graph = maybe_sparsify(new_graph)
-        self.graph = new_graph
+        constructor (``Problem.canonical``).  On the sparse path the
+        running ``SparsePhi`` is first re-expressed on the new slot
+        layout by **edge identity** (``core.sparse.remap_phi`` — churn
+        can repack CSR slots even at unchanged widths, so positional
+        reuse would scramble edges), then warm-started part-wise through
+        the same ``warm_start_phi`` row math as the dense tensor."""
+        old_graph, phi = self.graph, self.state.phi
+        self.problem = dataclasses.replace(
+            self.problem, graph=new_graph).canonical().validate()
+        new_graph = self.graph = self.problem.graph
         if isinstance(new_graph, CECGraphSparse):
-            if (isinstance(self.phi, SparsePhi)
+            if (isinstance(phi, SparsePhi)
                     and isinstance(old_graph, CECGraphSparse)
                     and old_graph.n_bar == new_graph.n_bar):
                 from repro.core.sparse import remap_phi
 
-                phi = remap_phi(old_graph, new_graph, self.phi)
-                self.phi = SparsePhi(
+                phi = remap_phi(old_graph, new_graph, phi)
+                phi = SparsePhi(
                     rows=warm_start_phi(phi.rows, new_graph.out_mask,
                                         explore),
                     src=warm_start_phi(phi.src, new_graph.src_out_mask,
                                        explore))
             else:
-                self.phi = new_graph.uniform_phi()
-        elif (not isinstance(self.phi, SparsePhi)
-                and self.phi.shape == new_graph.out_mask.shape):
-            self.phi = warm_start_phi(self.phi, new_graph.out_mask, explore)
+                phi = new_graph.uniform_phi()
+        elif (not isinstance(phi, SparsePhi)
+                and phi.shape == new_graph.out_mask.shape):
+            phi = warm_start_phi(phi, new_graph.out_mask, explore)
         else:
-            self.phi = new_graph.uniform_phi()
+            phi = new_graph.uniform_phi()
+        self.state = self.state._replace(phi=phi)
 
     def on_demand_change(self, lam_total: float):
-        """Re-scale the admission split onto a new total demand λ."""
-        self.lam = self.lam * (lam_total / self.lam_total)
+        """Re-scale the admission split onto a new total demand λ.
+
+        Only the ``Problem.lam_total`` leaf changes — the fused step's
+        compiled executable is reused as-is.
+        """
+        lam = self.state.lam * (lam_total / self.lam_total)
         self.lam_total = float(lam_total)
-        self.lam = _project_box_simplex(self.lam, self.lam_total, self.delta)
+        self.problem = self.problem.with_demand(jnp.float32(lam_total))
+        self.state = self.state._replace(
+            lam=project_box_simplex(lam, self.lam_total, self.config.delta))
 
     def apply_scenario_event(self, state: ScenarioState,
                              event: Event, explore: float = 0.1
@@ -191,10 +234,10 @@ class CECRouter:
         ``state`` is the fleet's physical description (the same
         ``core.scenario.ScenarioState`` the offline sweeps evolve); the
         event is applied there, the augmented graph rebuilt, and the
-        running (Λ, φ) warm-started exactly as ``run_scenario`` does.
-        Returns the post-event state — thread it into the next call.
-        Bank swaps change only the *measured* utility (the environment),
-        so the router's iterates carry over untouched."""
+        running ``SolverState`` warm-started exactly as ``run_scenario``
+        does.  Returns the post-event state — thread it into the next
+        call.  Bank swaps change only the *measured* utility (the
+        environment), so the router's iterates carry over untouched."""
         new_state = apply_event(state, event)
         if isinstance(event, DemandShift):
             self.on_demand_change(new_state.lam_total)

@@ -34,6 +34,7 @@ import numpy as np
 
 from repro.core.scenario import Scenario, ScenarioState, event_schedule, \
     initial_state
+from repro.core.solver import SolverConfig
 
 from .cec_router import CECRouter
 from .engine import InferenceEngine, Request
@@ -74,13 +75,17 @@ class ServingSim:
     delta: float = 0.5
     eta_outer: float = 0.05
     eta_inner: float = 3.0
+    config: SolverConfig | None = None     # overrides the three knobs above
 
     def __post_init__(self):
         self.state: ScenarioState = initial_state(self.scenario, self.seed)
+        # the knobs→config adaptation lives in CECRouter (one mapping);
+        # read the resolved config back so both views agree
         self.router = CECRouter(self.state.graph(),
                                 lam_total=self.state.lam_total,
                                 delta=self.delta, eta_outer=self.eta_outer,
-                                eta_inner=self.eta_inner)
+                                eta_inner=self.eta_inner, config=self.config)
+        self.config = self.router.config
         self.n_versions = self.state.deploy.shape[0]
         if self.quality is None:
             self.quality = np.linspace(1.0, 2.0, self.n_versions)

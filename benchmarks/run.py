@@ -33,7 +33,7 @@ MODULES = ("fig7_routing_convergence", "fig8_9_network_size",
            "fig10_utility_functions", "fig11_single_loop",
            "table2_topologies", "bench_kernels", "bench_batched",
            "bench_scenarios", "bench_router", "bench_sparse",
-           "perf_iterations")
+           "bench_fleet", "perf_iterations")
 
 TRAJECTORY_DIR = pathlib.Path("benchmarks/trajectory")
 TRAJECTORY_SCHEMA = 1

@@ -1,15 +1,29 @@
-"""Coverage floor gate for the control-plane core (CI bench-smoke job).
+"""Coverage floor gate for the solver-facing packages (CI bench-smoke job).
 
 Reads a ``coverage.json`` produced by ``pytest --cov=repro
---cov-report=json``, prints a per-file summary for ``src/repro/core/``,
-and fails when the aggregate line coverage of that package drops below
-the recorded floor.
+--cov-report=json``, prints a per-file summary for each gated package,
+and fails when any package's aggregate line coverage drops below its
+recorded floor.
 
-The floor is the level recorded at PR 4 (the sparse-engine PR that
-introduced this gate) minus a small flake margin.  Policy: ratchet it
-*upward* as coverage grows; never lower it to make a PR pass — delete the
-untested code or test it.  Override for local experiments only:
-``REPRO_CORE_COV_MIN=<percent>``.
+Gated packages:
+
+* ``src/repro/core/`` — the control-plane core; floor recorded at PR 4
+  (the sparse-engine PR that introduced this gate).
+* ``src/repro/parallel/`` — the sharding/collectives layer the fleet
+  engine (``run_batch_sharded``, DESIGN.md §14) rides on; floor recorded
+  at PR 6 (~32% measured in-process, gated at 25%).  Far lower than
+  core's on purpose and honestly so: the multi-device tier (ring
+  all-reduce bodies, MoE all-to-all, the LM mesh-rule functions) runs in
+  subprocesses under ``--xla_force_host_platform_device_count=8``, which
+  pytest-cov cannot see — the in-process 1-device parity + property
+  tests (fleet specs, pad/unpad, shard_map compat, int8 collectives,
+  annotate) are what this gate actually guards.
+
+Floors are *minus a small flake margin* under what the suite measures.
+Policy: ratchet them upward as coverage grows; never lower one to make a
+PR pass — delete the untested code or test it.  Override for local
+experiments only: ``REPRO_CORE_COV_MIN=<percent>`` /
+``REPRO_PARALLEL_COV_MIN=<percent>``.
 
 Usage:  python scripts/check_core_coverage.py [coverage.json]
 """
@@ -20,20 +34,19 @@ import os
 import pathlib
 import sys
 
-# Recorded at PR 4 (see module docstring); keep in sync with reality by
-# ratcheting, not lowering.
-CORE_FLOOR_PERCENT = 80.0
+# (path marker, recorded floor %, local-override env var); keep in sync
+# with reality by ratcheting, not lowering.
+GATES = (
+    ("repro/core/", 80.0, "REPRO_CORE_COV_MIN"),
+    ("repro/parallel/", 25.0, "REPRO_PARALLEL_COV_MIN"),
+)
 
-CORE_MARKER = "repro/core/"
 
-
-def main(path: str = "coverage.json") -> int:
-    floor = float(os.environ.get("REPRO_CORE_COV_MIN", CORE_FLOOR_PERCENT))
-    data = json.loads(pathlib.Path(path).read_text())
+def _gate(data: dict, marker: str, floor: float) -> int:
     rows = []
     covered = statements = 0
     for fname, info in sorted(data["files"].items()):
-        if CORE_MARKER not in fname.replace("\\", "/"):
+        if marker not in fname.replace("\\", "/"):
             continue
         s = info["summary"]
         covered += s["covered_lines"]
@@ -41,25 +54,34 @@ def main(path: str = "coverage.json") -> int:
         rows.append((fname, s["num_statements"], s["covered_lines"],
                      s["percent_covered"]))
     if not statements:
-        print(f"error: no files matching '{CORE_MARKER}' in {path}",
-              file=sys.stderr)
+        print(f"error: no files matching '{marker}'", file=sys.stderr)
         return 2
 
     print(f"{'file':58s} {'stmts':>6s} {'cover':>6s} {'pct':>7s}")
     for fname, n, c, pct in rows:
         print(f"{fname:58s} {n:6d} {c:6d} {pct:6.1f}%")
     total = 100.0 * covered / statements
-    print(f"{'TOTAL src/repro/core/':58s} {statements:6d} {covered:6d} "
+    print(f"{'TOTAL src/' + marker:58s} {statements:6d} {covered:6d} "
           f"{total:6.1f}%  (floor {floor:.1f}%)")
 
     if total < floor:
-        print(f"FAIL: core coverage {total:.1f}% is below the recorded "
+        print(f"FAIL: {marker} coverage {total:.1f}% is below the recorded "
               f"floor {floor:.1f}% — add tests (or, for a deliberate "
               "removal of tested code, ratchet consciously in "
               "scripts/check_core_coverage.py with a commit-message note)",
               file=sys.stderr)
         return 1
     return 0
+
+
+def main(path: str = "coverage.json") -> int:
+    data = json.loads(pathlib.Path(path).read_text())
+    rc = 0
+    for marker, default_floor, env in GATES:
+        floor = float(os.environ.get(env, default_floor))
+        rc = max(rc, _gate(data, marker, floor))
+        print()
+    return rc
 
 
 if __name__ == "__main__":

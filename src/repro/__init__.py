@@ -24,7 +24,7 @@ import importlib
 # names resolved from repro.core on first access
 _CORE_EXPORTS = (
     "Problem", "SolverConfig", "SolverState", "StepInfo", "Result",
-    "init", "step", "run", "fused_step", "run_batch",
+    "init", "step", "run", "fused_step", "run_batch", "run_batch_sharded",
     "paper_defaults", "serving_defaults",
     "solve_jowr", "gs_oma", "omad", "solve_jowr_batch", "solve_routing",
     "run_scenario", "Scenario", "scenario_metrics", "named_scenarios",

@@ -14,8 +14,8 @@ from .allocation import (ControlStep, JOWRResult, allocation_kkt_residual,
                          control_step, fused_control_step, gs_oma,
                          perturbed_allocations)
 from .batch import (CECGraphBatch, CECGraphSparseBatch, pad_graph,
-                    pad_sparse_graph, run_batch, solve_jowr_batch,
-                    solve_routing_batch, stack_banks)
+                    pad_sparse_graph, run_batch, run_batch_sharded,
+                    solve_jowr_batch, solve_routing_batch, stack_banks)
 from .costs import CostFn, get as get_cost
 from .flow import cost_and_state, link_flows, propagate, total_cost
 from .graph import (CECGraph, CECGraphSparse, InfeasibleTopology,
@@ -43,7 +43,7 @@ from .utility import UtilityBank, make_bank
 __all__ = [
     # the solver core (DESIGN.md §13)
     "Problem", "SolverConfig", "SolverState", "StepInfo", "Result",
-    "init", "step", "run", "fused_step", "run_batch",
+    "init", "step", "run", "fused_step", "run_batch", "run_batch_sharded",
     "paper_defaults", "serving_defaults", "project_box_simplex",
     "resolve_cost", "solver",
     # legacy shims + everything they ride on

@@ -177,6 +177,46 @@ def maybe_sparsify(graph, *companions):
     return sparsify(graph)
 
 
+# --------------------------------------------------------------------------
+# fleet-mesh axis (DESIGN.md §14): which device mesh, if any, the caller is
+# tracing sharded fleet solves against.  Part of :func:`state_key` so cached
+# jitted consumers never alias executables across mesh shapes (an 8-way
+# shard_map program is a different executable from the 1-device one even
+# when every pytree shape matches).
+# --------------------------------------------------------------------------
+
+_fleet_key: tuple | None = None
+
+
+def mesh_fingerprint(mesh) -> tuple:
+    """Hashable identity of a mesh: axis names, shape, and device ids."""
+    return (tuple(mesh.axis_names), tuple(mesh.devices.shape),
+            tuple(int(d.id) for d in mesh.devices.flat))
+
+
+def fleet_key() -> tuple | None:
+    """The active fleet-mesh fingerprint (``None`` = unsharded vmap path)."""
+    return _fleet_key
+
+
+@contextlib.contextmanager
+def fleet_dispatch(mesh):
+    """Mark ``mesh`` as the active fleet mesh while tracing.
+
+    ``run_batch_sharded`` / ``run_scenario(mesh=...)`` enter this around
+    their shard_map construction so every cache keyed on
+    :func:`state_key` (``fused_step``, the scenario segment solver)
+    distinguishes mesh shapes instead of replaying a stale trace.
+    """
+    global _fleet_key
+    prev = _fleet_key
+    _fleet_key = None if mesh is None else mesh_fingerprint(mesh)
+    try:
+        yield
+    finally:
+        _fleet_key = prev
+
+
 def state_key() -> tuple:
     """Hashable snapshot of the dispatch configuration.
 
@@ -184,11 +224,13 @@ def state_key() -> tuple:
     fused_control_step``) must key their cache on this so that tracing
     under ``kernel_dispatch``/``set_kernel_threshold`` gets a fresh trace
     instead of silently reusing a cached jnp-path executable (see the
-    module docstring's trace-time caveat).  Includes the sparse policy:
-    a router tracing under ``sparse_dispatch`` must not reuse a dense
-    trace.
+    module docstring's trace-time caveat).  Includes the sparse policy
+    (a router tracing under ``sparse_dispatch`` must not reuse a dense
+    trace) and the fleet mesh (an executable traced for an 8-way
+    ``shard_map`` must not alias the 1-device or vmap one).
     """
-    return (_threshold, _explicit, _sparse_threshold, _sparse_density)
+    return (_threshold, _explicit, _sparse_threshold, _sparse_density,
+            _fleet_key)
 
 
 def use_kernels(n_bar: int) -> bool:

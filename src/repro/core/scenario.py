@@ -39,6 +39,7 @@ from repro.topo import make_topology
 from repro.topo.churn import rewire_links
 
 from . import costs as _costs
+from . import dispatch
 from .batch import CECGraphBatch, pad_graph, stack_banks
 from .graph import CECGraph, InfeasibleTopology, build_augmented, draw_instance
 from .routing import warm_start_phi
@@ -322,17 +323,26 @@ class ScenarioResult(NamedTuple):
 
 
 @functools.lru_cache(maxsize=None)
-def _segment_solver(config: SolverConfig, cost_name: str, outer_iters: int):
+def _segment_solver(config: SolverConfig, cost_name: str, outer_iters: int,
+                    mesh=None, _dispatch_key=None):
     """One jitted batched segment solve, cached on its static knobs.
 
     ``lam_total`` is a traced scalar argument (not a closure constant) so
     demand shifts reuse the same executable; the carried iterates enter
     and leave as a stacked ``SolverState`` (``None`` for the cold first
-    segment).
+    segment).  ``mesh`` switches the segment onto the sharded fleet
+    driver (``run_batch_sharded``) — a ``jax.sharding.Mesh`` is hashable,
+    so it participates in the cache key, and ``_dispatch_key`` (pass
+    ``dispatch.state_key()``) keeps entries from aliasing across kernel/
+    sparse/fleet dispatch overrides active at trace time.
     """
-    from .batch import run_batch
+    from .batch import run_batch, run_batch_sharded
 
     def fn(batch, banks, lam_total, state):
+        if mesh is not None:
+            return run_batch_sharded(batch, banks, lam_total, config,
+                                     iters=outer_iters, cost=cost_name,
+                                     mesh=mesh, state=state)
         return run_batch(batch, banks, lam_total, config,
                          iters=outer_iters, cost=cost_name, state=state)
 
@@ -351,6 +361,7 @@ def run_scenario(
     inner_iters: int = 1,
     explore: float = 0.1,
     config: SolverConfig | None = None,
+    mesh=None,
 ) -> ScenarioResult:
     """Advance the online solver through the scenario's segments.
 
@@ -366,6 +377,13 @@ def run_scenario(
     measure.  An event-free scenario is exactly one batched
     ``solve_jowr`` (the static engine) — asserted to machine precision
     in the tests.
+
+    ``mesh`` (a 1-D fleet mesh, see ``launch.mesh.fleet_mesh``) runs
+    every segment on the sharded fleet driver
+    (:func:`core.batch.run_batch_sharded`): the seed axis is partitioned
+    across the mesh, warm-starts included — large seed ensembles scale
+    across devices without touching the timeline logic.  Parity with the
+    unsharded driver is part of the sharding test tier (DESIGN.md §14).
     """
     if config is None:
         config = SolverConfig(method=method, delta=float(delta),
@@ -385,7 +403,8 @@ def run_scenario(
                 lam = state.lam * (seg.lam_total / prev.lam_total)
                 lam = project_box_simplex(lam, seg.lam_total, config.delta)
                 state = state._replace(lam=lam)
-        solve = _segment_solver(config, cost_name, seg.n_iters)
+        solve = _segment_solver(config, cost_name, seg.n_iters, mesh,
+                                dispatch.state_key())
         res = solve(seg.batch, seg.banks, jnp.float32(seg.lam_total), state)
         state = res.state
         u_trajs.append(res.utility_traj)

@@ -27,6 +27,24 @@ def make_mesh(shape: tuple[int, ...], axes: tuple[str, ...]):
     return jax.make_mesh(shape, axes)
 
 
+def fleet_mesh(n_devices: int | None = None, devices=None):
+    """The solver core's 1-D instance-axis mesh: axes ``("fleet",)``.
+
+    ``run_batch_sharded`` (core/batch.py, DESIGN.md §14) shards the
+    stacked instance/seed axis of a fleet solve over this mesh.  Uses
+    every visible device by default; a 1-device fleet mesh is valid (and
+    bit-identical to the plain vmap path — the parity tier asserts it),
+    so callers never need a device-count special case.
+    """
+    devices = list(devices if devices is not None else jax.devices())
+    if n_devices is not None:
+        if not 1 <= n_devices <= len(devices):
+            raise ValueError(
+                f"n_devices={n_devices} outside [1, {len(devices)}]")
+        devices = devices[:n_devices]
+    return jax.sharding.Mesh(np.array(devices), ("fleet",))
+
+
 def elastic_mesh(n_model: int = 16, devices=None):
     """Build the largest (data, model) mesh from the devices still alive.
 

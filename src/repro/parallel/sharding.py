@@ -1,6 +1,19 @@
-"""Sharding rules: parameter/batch/cache PartitionSpecs for any mesh.
+"""Sharding rules: fleet-axis specs for the solver core + LM PartitionSpecs.
 
-Scheme (DESIGN.md §5):
+Two consumers share this module:
+
+* **The solver core's fleet axis** (DESIGN.md §14): ``run_batch_sharded``
+  shards the instance/seed axis of a stacked ``Problem``/``SolverState``
+  pytree across a 1-D device mesh.  :func:`fleet_axis` names the mesh
+  axis, :func:`fleet_specs` builds the leading-axis PartitionSpec tree,
+  and :func:`pad_fleet`/:func:`unpad_fleet` implement uneven-shard
+  padding with exact masking (pad lanes replicate the last real
+  instance — a feasible solve whose rows are sliced off afterwards, so
+  unpad(pad(x)) is bit-identical to x).
+* **The vestigial LM stack** (DESIGN.md §5): parameter/batch/cache
+  PartitionSpecs below.
+
+LM scheme (DESIGN.md §5):
   * weights — 2-D sharded: the d_model-ish dim FSDP over the data axes
     ('pod','data'), the wide dim (d_ff / flattened heads / vocab) TP over
     'model'.  Flattened head dims (H·hd) are 16-divisible for *all* ten
@@ -22,9 +35,98 @@ import re
 from typing import Any
 
 import jax
+import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.models.config import ModelConfig
+
+# ---------------------------------------------------------------------------
+# fleet-axis helpers (solver core, DESIGN.md §14)
+# ---------------------------------------------------------------------------
+
+FLEET_AXIS = "fleet"
+
+
+def fleet_axis(mesh) -> str:
+    """The mesh axis carrying the instance/seed dimension.
+
+    A fleet mesh is 1-D (``launch.mesh.fleet_mesh``); for convenience any
+    mesh with a ``"fleet"`` axis qualifies.  Raises on meshes where the
+    fleet axis is ambiguous — sharding the instance axis over a silently
+    guessed axis would be an invisible wrong answer.
+    """
+    if FLEET_AXIS in mesh.axis_names:
+        return FLEET_AXIS
+    if len(mesh.axis_names) == 1:
+        return mesh.axis_names[0]
+    raise ValueError(
+        f"mesh axes {mesh.axis_names} have no '{FLEET_AXIS}' axis and are "
+        "not 1-D: name the instance axis explicitly (launch.mesh."
+        "fleet_mesh builds the canonical 1-D fleet mesh)")
+
+
+def fleet_spec(ndim: int, axis: str = FLEET_AXIS) -> P:
+    """Leading-axis PartitionSpec for one rank-``ndim`` leaf.
+
+    Rank-0 leaves (scalars) have no instance axis and replicate.
+    """
+    if ndim == 0:
+        return P()
+    return P(axis, *([None] * (ndim - 1)))
+
+
+def fleet_specs(tree: Any, axis: str = FLEET_AXIS, *,
+                shard: bool = True) -> Any:
+    """PartitionSpec tree sharding every leaf's leading axis over ``axis``.
+
+    ``shard=False`` replicates the whole tree (the broadcast-bank /
+    scalar-demand case).  Works on concrete arrays and on
+    ``ShapeDtypeStruct`` trees from ``jax.eval_shape`` alike.
+    """
+    def spec_for(leaf):
+        ndim = len(leaf.shape) if hasattr(leaf, "shape") else jnp.ndim(leaf)
+        return fleet_spec(ndim, axis) if shard else P()
+
+    return jax.tree_util.tree_map(spec_for, tree)
+
+
+def fleet_padded_size(size: int, n_shards: int) -> int:
+    """The smallest multiple of ``n_shards`` that is ≥ ``size``."""
+    if size < 1 or n_shards < 1:
+        raise ValueError(f"need size ≥ 1 and n_shards ≥ 1, got "
+                         f"({size}, {n_shards})")
+    return -(-size // n_shards) * n_shards
+
+
+def pad_fleet(tree: Any, n_shards: int) -> Any:
+    """Pad every leaf's leading axis up to a multiple of ``n_shards``.
+
+    Pad lanes replicate the **last real instance**, so they carry a
+    feasible problem (no NaN-generating zero masks enter the solve) and
+    every shard runs the same program.  Exactness comes from masking on
+    the way out: :func:`unpad_fleet` slices the pad lanes off, making
+    ``unpad_fleet(pad_fleet(x, n), B)`` bit-identical to ``x``.
+    """
+    def pad_leaf(leaf):
+        leaf = jnp.asarray(leaf)
+        b = leaf.shape[0]
+        extra = fleet_padded_size(b, n_shards) - b
+        if extra == 0:
+            return leaf
+        fill = jnp.broadcast_to(leaf[-1:], (extra,) + leaf.shape[1:])
+        return jnp.concatenate([leaf, fill], axis=0)
+
+    return jax.tree_util.tree_map(pad_leaf, tree)
+
+
+def unpad_fleet(tree: Any, size: int) -> Any:
+    """Slice every leaf's leading axis back to the true fleet ``size``."""
+    return jax.tree_util.tree_map(lambda leaf: leaf[:size], tree)
+
+
+# ---------------------------------------------------------------------------
+# LM parameter/batch/cache rules (DESIGN.md §5)
+# ---------------------------------------------------------------------------
 
 
 def _fsdp(mesh) -> tuple[str, ...] | str | None:

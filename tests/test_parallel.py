@@ -7,7 +7,6 @@ import sys
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 try:
     from hypothesis import given, settings, strategies as st
 except ModuleNotFoundError:
@@ -76,13 +75,18 @@ print("RING_OK")
     assert "RING_OK" in out
 
 
-@pytest.mark.xfail(strict=False,
-                   reason="3-step loss decrease is backend/version "
-                          "sensitive: on jax 0.4.37 CPU the smoke run "
-                          "gives non-monotone losses (e.g. 6.013 → 6.031)")
 def test_pjit_train_step_runs_on_fake_mesh():
     """Real execution (not just lowering) of the sharded train step on a
-    2×4 mesh; loss decreases over 3 steps."""
+    2×4 mesh: finite loss/grad-norm with the expected shapes, and the
+    loss strictly decreases when the same batch is descended three times.
+
+    Formerly an xfail: the old assert compared losses across *fresh*
+    batches under the default cosine schedule (lr = 0 at step 0 — the
+    warmup ramp), so the "decrease" was noise and flipped sign across
+    jax versions/backends.  Repeating one batch under a constant lr makes
+    descent a property of the optimizer, not of batch luck, and holds on
+    every backend in the CI matrix.
+    """
     out = _run_subprocess("""
 import jax, jax.numpy as jnp, numpy as np
 from repro.configs import get_config
@@ -108,15 +112,18 @@ batch = batch_for_step(0, 0, 4, 32, cfg.vocab)
 bspec = make_shardings(mesh, batch_specs(cfg, batch, mesh))
 batch = jax.tree_util.tree_map(jax.device_put, batch, bspec)
 with mesh, activation_sharding(mesh, dp_axes(mesh)):
-    step = jax.jit(make_train_step(cfg, optim, remat=False))
-    losses = []
+    step = jax.jit(make_train_step(cfg, optim, lr_fn=lambda s: 3e-3,
+                                   remat=False))
+    losses, gnorms = [], []
     for s in range(3):
-        b = jax.tree_util.tree_map(jax.device_put,
-                                   batch_for_step(0, s, 4, 32, cfg.vocab), bspec)
-        params, opt, m = step(params, opt, b)
+        params, opt, m = step(params, opt, batch)
+        assert m["loss"].shape == (), m["loss"].shape
         losses.append(float(m["loss"]))
+        gnorms.append(float(m["grad_norm"]))
+assert all(np.isfinite(losses)) and all(np.isfinite(gnorms)), (losses, gnorms)
+assert all(g > 0 for g in gnorms), gnorms
+assert losses[1] < losses[0] and losses[2] < losses[1], losses
 print("LOSSES", losses)
-assert losses[-1] < losses[0]
 print("PJIT_OK")
 """)
     assert "PJIT_OK" in out

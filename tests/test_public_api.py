@@ -38,6 +38,13 @@ PINNED_SIGNATURES = {
                  "state: 'SolverState | None' = None, "
                  "phi0: 'Array | None' = None, "
                  "lam0: 'Array | None' = None) -> '_solver.Result'",
+    "run_batch_sharded": "(batch: 'CECGraphBatch | CECGraphSparseBatch', "
+                         "banks: 'UtilityBank | Sequence[UtilityBank]', "
+                         "lam_total, config: 'SolverConfig', *, "
+                         "iters: 'int', cost='exp', mesh=None, "
+                         "state: 'SolverState | None' = None, "
+                         "phi0: 'Array | None' = None, "
+                         "lam0: 'Array | None' = None) -> '_solver.Result'",
     # -- legacy shims (keyword-compatible, frozen) ------------------------
     "solve_jowr":
         "(graph: 'CECGraph', bank: 'UtilityBank', lam_total: 'float', *, "
@@ -74,13 +81,13 @@ PINNED_SIGNATURES = {
         "method: 'Method' = 'single', cost_name: 'str' = 'exp', "
         "delta: 'float' = 0.5, eta_outer: 'float' = 0.05, "
         "eta_inner: 'float' = 3.0, inner_iters: 'int' = 1, "
-        "explore: 'float' = 0.1, config: 'SolverConfig | None' = None) "
-        "-> 'ScenarioResult'",
+        "explore: 'float' = 0.1, config: 'SolverConfig | None' = None, "
+        "mesh=None) -> 'ScenarioResult'",
 }
 
 PINNED_ALL = [
     "Problem", "SolverConfig", "SolverState", "StepInfo", "Result",
-    "init", "step", "run", "fused_step", "run_batch",
+    "init", "step", "run", "fused_step", "run_batch", "run_batch_sharded",
     "paper_defaults", "serving_defaults",
     "solve_jowr", "gs_oma", "omad", "solve_jowr_batch", "solve_routing",
     "run_scenario", "Scenario", "scenario_metrics", "named_scenarios",

@@ -1,0 +1,149 @@
+"""Multi-tenant streaming control plane under churn (DESIGN.md §15).
+
+The operational question for the RouterFleet: *how many session control
+decisions per second does the fleet sustain, and how long is one control
+interval end-to-end* — microbatched measured-utility callback, donated
+vmapped step, front-buffer publish — under each named arrival process
+(``serve.traffic.named_traces``: poisson / diurnal / flash_crowd)?
+
+Per trace the bench drives ``T`` control intervals, re-scaling per-tenant
+demand from the trace each interval (a traced-leaf update — never a
+retrace) and timing each interval wall-to-wall (callback included —
+that's the honest control latency the serving plane sees).  Reported:
+p50/p99/mean interval latency and ``sessions_per_s`` = K·W session
+decisions / p50 interval.  The flash-crowd leg additionally consumes a
+``NodeFail`` scenario event mid-trace, so the timing covers live
+topology churn (same-shape splice, no retrace).
+
+The headline row asserts the smoke bar: the fleet must clear
+``SPEEDUP_FLOOR ×`` the throughput of K independent ``CECRouter``s
+stepped in a Python loop over the same timeline (the K-fold vmap win is
+far larger at real K; the floor is honest about 1-warmup CPU smoke
+jitter, cf. ``bench_fleet.SMOKE_RATIO_FLOOR``), and the two must agree
+on the final Λ to 1e-5 — the bench re-proves the parity contract it
+benchmarks (``tests/test_fleet.py``).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.scenario import NodeFail, initial_state, named_scenarios
+from repro.serve import CECRouter, RouterFleet
+from repro.serve.traffic import named_traces
+
+from . import common
+from .common import dump, emit
+
+# keep the per-trace latency rows in the perf-trajectory entry
+# (benchmarks/run.py strips "rows" for modules that don't opt in)
+TRAJECTORY_ROWS = True
+
+# fleet vs K-router-loop throughput smoke bar: observed 1.3–2.8× at the
+# smoke K=4 on CPU CI-class hardware (the win grows with K); the floor
+# sits under the observed minimum because 1-warmup smoke timing jitters
+SPEEDUP_FLOOR = 1.15
+
+
+def _tenants(K, *, n, horizon):
+    sc = named_scenarios(horizon=horizon, n=n, p=0.4)["steady"]
+    states = [initial_state(sc, seed=s) for s in range(K)]
+    graphs = [st.graph() for st in states]
+    fns = [
+        (lambda lams, b=st.bank:
+         np.asarray(jax.vmap(b.total)(jnp.asarray(lams))))
+        for st in states]
+    return sc, states, graphs, fns
+
+
+def _drive_fleet(fleet, fns, demand, events=None):
+    """Per-interval wall latencies (s) over one demand timeline."""
+    lat = []
+    for t in range(demand.shape[0]):
+        t0 = time.perf_counter()
+        if events and t in events:
+            events[t]()
+        fleet.set_demand(demand[t])
+        fleet.control_step(fns)
+        jax.block_until_ready(fleet.view.lam)
+        lat.append(time.perf_counter() - t0)
+    return np.asarray(lat)
+
+
+def _drive_routers(routers, fns, demand):
+    lat = []
+    for t in range(demand.shape[0]):
+        t0 = time.perf_counter()
+        for k, (r, fn) in enumerate(zip(routers, fns)):
+            r.on_demand_change(float(demand[t, k]))
+            r.control_step(fn)
+        jax.block_until_ready([r.state.lam for r in routers])
+        lat.append(time.perf_counter() - t0)
+    return np.asarray(lat)
+
+
+def main() -> list[dict]:
+    K = common.scaled(32, 4)
+    n_nodes = common.scaled(12, 8)
+    T = common.scaled(40, 6)
+    sc, states, graphs, fns = _tenants(K, n=n_nodes, horizon=8)
+    W = graphs[0].n_sessions
+    base = np.full(K, sc.lam_total, np.float32)
+    traces = named_traces(T, K, seed=0)
+
+    rows = []
+    speedup = None
+    for name, trace in traces.items():
+        demand = trace.demand(base)          # [T, K] = provisioned × shape
+        fleet = RouterFleet(graphs, base, depth_max=graphs[0].depth_max + 2)
+        # compile outside the timed loop: step, publish, demand rescale
+        fleet.set_demand(demand[0])
+        fleet.control_step(fns)
+
+        events = None
+        if name == "flash_crowd":
+            scn = states[0]
+            ev = NodeFail(at=1, count=1, seed=17)
+            events = {T // 2:
+                      (lambda: fleet.apply_scenario_event(0, scn, ev))}
+        lat = _drive_fleet(fleet, fns, demand, events)
+
+        p50 = float(np.percentile(lat, 50))
+        p99 = float(np.percentile(lat, 99))
+        sessions_per_s = K * W / p50
+        rec = {"trace": name, "n_tenants": K, "n_sessions": W,
+               "intervals": T,
+               "p50_ms": p50 * 1e3, "p99_ms": p99 * 1e3,
+               "mean_ms": float(lat.mean()) * 1e3,
+               "sessions_per_s": sessions_per_s}
+
+        if name == "poisson":
+            # K-independent-router baseline + parity re-proof (no mid-
+            # trace events on this leg, so the two timelines are equal)
+            routers = [CECRouter(g, lam_total=float(b))
+                       for g, b in zip(graphs, base)]
+            for k, (r, fn) in enumerate(zip(routers, fns)):
+                r.on_demand_change(float(demand[0, k]))
+                r.control_step(fn)
+            lat_seq = _drive_routers(routers, fns, demand)
+            drift = max(
+                float(jnp.max(jnp.abs(fleet.view.lam[k] - r.state.lam)))
+                for k, r in enumerate(routers))
+            assert drift <= 1e-5, f"fleet/router drift {drift}"
+            speedup = float(np.median(lat_seq) / np.median(lat))
+            rec["speedup_vs_sequential"] = speedup
+        rows.append(rec)
+        emit(f"serving.{name}.K{K}.interval", p50,
+             f"p99_ms={p99*1e3:.2f};sessions_per_s={sessions_per_s:.0f}")
+
+    if common.SMOKE:
+        assert speedup is not None and speedup >= SPEEDUP_FLOOR, (
+            f"fleet control throughput fell to {speedup:.2f}x of the "
+            f"K-router loop — vmap/donation regression (floor "
+            f"{SPEEDUP_FLOOR}x at K={K})")
+
+    dump("bench_serving", rows)
+    return rows

@@ -33,10 +33,10 @@ MODULES = ("fig7_routing_convergence", "fig8_9_network_size",
            "fig10_utility_functions", "fig11_single_loop",
            "table2_topologies", "bench_kernels", "bench_batched",
            "bench_scenarios", "bench_router", "bench_sparse",
-           "bench_fleet", "perf_iterations")
+           "bench_fleet", "bench_serving", "perf_iterations")
 
 TRAJECTORY_DIR = pathlib.Path("benchmarks/trajectory")
-TRAJECTORY_SCHEMA = 1
+TRAJECTORY_SCHEMA = 2
 
 
 def _git(*args: str) -> str:
@@ -68,6 +68,12 @@ def write_trajectory_entry(summary: dict) -> pathlib.Path:
       seconds, med_latency_us|None}} — ``med_latency_us`` is the median
       over the module's emitted CSV rows.  Only full runs write an entry
       (``--only`` subsets would masquerade as a complete record).
+
+    Schema 2 (additive): a module that sets ``TRAJECTORY_ROWS = True``
+    keeps its per-row records under ``benches.<module>.rows`` — e.g.
+    ``bench_serving``'s p50/p99 control-interval latency per churn trace
+    (README "Perf trajectory" documents how to read them).  Every other
+    module still has its rows stripped to keep entries small.
     """
     import jax
 
@@ -136,8 +142,13 @@ def main() -> None:
         print(f"wrote BENCH_smoke.json ({len(summary)} modules, "
               f"{len(failed)} failed)", file=sys.stderr)
         if not only:        # a --only subset is not a trajectory point
+            def _keeps_rows(mod: str) -> bool:
+                m = sys.modules.get(f"benchmarks.{mod}")
+                return bool(getattr(m, "TRAJECTORY_ROWS", False))
+
             traj = write_trajectory_entry(
-                {mod: {k: v for k, v in s.items() if k != "rows"}
+                {mod: (s if _keeps_rows(mod)
+                       else {k: v for k, v in s.items() if k != "rows"})
                  for mod, s in summary.items()})
             print(f"wrote {traj}", file=sys.stderr)
 

@@ -3,12 +3,20 @@ three LM versions on an edge fleet, OMAD steering admission + routing
 online from measured feedback, real decode steps on CPU.
 
     PYTHONPATH=src python examples/cec_serving.py
+
+(REPRO_EXAMPLES_SMOKE=1 shrinks the run for the CI examples-smoke job.)
 """
+import os
 import sys
 
 from repro.launch.serve import main
 
 if __name__ == "__main__":
-    sys.argv = [sys.argv[0], "--intervals", "8", "--requests", "18",
-                "--nodes", "12", "--fail-node-at", "5"]
+    if os.environ.get("REPRO_EXAMPLES_SMOKE"):
+        args = ["--intervals", "4", "--requests", "8", "--nodes", "10",
+                "--fail-node-at", "2"]
+    else:
+        args = ["--intervals", "8", "--requests", "18", "--nodes", "12",
+                "--fail-node-at", "5"]
+    sys.argv = [sys.argv[0], *args]
     main()

@@ -1,0 +1,36 @@
+"""Multi-tenant serving: K tenants, one vmapped control step per interval.
+
+A traffic trace shapes per-tenant demand, a RouterFleet advances all K
+control planes in one donated jitted step, and the serving plane reads
+the published FleetView (DESIGN.md §15).
+
+    PYTHONPATH=src python examples/multi_tenant_serving.py
+
+(REPRO_EXAMPLES_SMOKE=1 shrinks the run for the CI examples-smoke job.)
+"""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import initial_state, named_scenarios
+from repro.serve import RouterFleet, poisson_trace
+
+K = 3 if os.environ.get("REPRO_EXAMPLES_SMOKE") else 8   # tenants
+T = 6 if os.environ.get("REPRO_EXAMPLES_SMOKE") else 30  # control intervals
+
+# K tenants: independent edge fleets with hidden (measured-only) utilities
+sc = named_scenarios(horizon=T, n=10, p=0.4)["steady"]
+tenants = [initial_state(sc, seed=s) for s in range(K)]
+measured = [lambda lams, b=t.bank: np.asarray(jax.vmap(b.total)(jnp.asarray(lams)))
+            for t in tenants]
+
+fleet = RouterFleet([t.graph() for t in tenants], [60.0] * K)
+demand = poisson_trace(T, K, seed=0).demand(60.0)   # [T, K] arrivals
+
+for t in range(T):
+    fleet.set_demand(demand[t])          # traced-leaf update, no retrace
+    rec = fleet.control_step(measured)   # one donated vmapped step for all K
+print("per-tenant admission splits:\n", np.round(fleet.view.admission_split(), 2))
+print("mean net utility per tenant:", np.round(rec["utility"], 2))

@@ -1,7 +1,11 @@
 """Quickstart: solve the paper's JOWR problem in ~20 lines.
 
     PYTHONPATH=src python examples/quickstart.py
+
+(REPRO_EXAMPLES_SMOKE=1 shrinks the run for the CI examples-smoke job.)
 """
+import os
+
 import numpy as np
 
 from repro.core import Problem, SolverConfig, build_random_cec, make_bank, run
@@ -20,9 +24,10 @@ bank = make_bank("log", n_sessions=3, seed=0, lam_total=60.0)
 problem = Problem.create(graph, bank, lam_total=60.0, cost="exp")
 config = SolverConfig(method="single", eta_outer=0.05, eta_inner=3.0)
 
-res = run(problem, config, iters=200)
+iters = 60 if os.environ.get("REPRO_EXAMPLES_SMOKE") else 200
+res = run(problem, config, iters=iters)
 
 print("allocation Λ* =", np.round(np.asarray(res.lam), 2))
 print("network utility trajectory:",
-      [round(float(u), 2) for u in res.utility_traj[::40]])
+      [round(float(u), 2) for u in res.utility_traj[:: iters // 5]])
 print("final utility U =", round(float(res.utility_traj[-1]), 3))

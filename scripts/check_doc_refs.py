@@ -1,0 +1,84 @@
+"""Docs-as-CI: every ``DESIGN.md §N`` reference must resolve (ISSUE 7).
+
+The codebase cites DESIGN.md sections from docstrings the way papers
+cite equations — ``(DESIGN.md §15.2)`` — and the design doc marks each
+PR's sections with a ``(PR n)`` tag.  Both conventions rot silently:
+a renumbered section orphans every citation, and a merged PR that keeps
+claiming "(this PR)" misdates the doc.  This checker makes both a CI
+failure (wired next to the coverage gate in ci.yml):
+
+1. every ``DESIGN.md §N[.M]`` reference in ``--src`` Python files must
+   match a ``## §N`` / ``### §N.M`` heading in ``--design``;
+2. at most the *newest* top-level section may carry ``(this PR)`` —
+   anything older must have been renamed to its ``(PR n)`` tag when the
+   next PR landed.
+
+Exits non-zero listing every violation (``tests/test_doc_refs.py``
+includes the planted-broken-reference negative test).
+"""
+from __future__ import annotations
+
+import argparse
+import pathlib
+import re
+import sys
+
+REF = re.compile(r"DESIGN\.md\s+§(\d+(?:\.\d+)?)")
+HEADING = re.compile(r"^#{2,3}\s+§(\d+(?:\.\d+)?)\b(.*)$")
+
+
+def design_sections(design: pathlib.Path) -> tuple[set[str], list[str]]:
+    """(section numbers, '(this PR)' violations) from the design doc."""
+    sections: set[str] = set()
+    this_pr: list[tuple[str, int]] = []
+    for lineno, line in enumerate(design.read_text().splitlines(), 1):
+        m = HEADING.match(line)
+        if not m:
+            continue
+        sections.add(m.group(1))
+        if "(this PR)" in m.group(2) and "." not in m.group(1):
+            this_pr.append((m.group(1), lineno))
+    top = [int(s) for s in sections if "." not in s]
+    newest = max(top) if top else None
+    errors = [
+        f"{design}:{lineno}: §{num} claims '(this PR)' but §{newest} is "
+        f"newer — rename to its '(PR n)' tag"
+        for num, lineno in this_pr if int(num) != newest]
+    return sections, errors
+
+
+def check_refs(design: pathlib.Path,
+               src_dirs: list[pathlib.Path]) -> list[str]:
+    sections, errors = design_sections(design)
+    for src in src_dirs:
+        for path in sorted(src.rglob("*.py")):
+            for lineno, line in enumerate(
+                    path.read_text().splitlines(), 1):
+                for m in REF.finditer(line):
+                    if m.group(1) not in sections:
+                        errors.append(
+                            f"{path}:{lineno}: reference to DESIGN.md "
+                            f"§{m.group(1)} — no such heading in {design}")
+    return errors
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--design", type=pathlib.Path,
+                    default=pathlib.Path("DESIGN.md"))
+    ap.add_argument("--src", type=pathlib.Path, action="append",
+                    help="source roots to scan (default: src)")
+    args = ap.parse_args(argv)
+    src_dirs = args.src or [pathlib.Path("src")]
+    errors = check_refs(args.design, src_dirs)
+    for e in errors:
+        print(e, file=sys.stderr)
+    if errors:
+        print(f"{len(errors)} broken doc reference(s)", file=sys.stderr)
+        return 1
+    print("doc refs OK", file=sys.stderr)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

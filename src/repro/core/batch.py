@@ -20,6 +20,7 @@ count W.
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Sequence
 
 import jax
@@ -372,6 +373,44 @@ def _vmapped_run(batch, banks, lam_total, config, *, iters, costfn,
                None if lam0 is None else 0)
     return jax.vmap(one, in_axes=in_axes)(
         batch.stacked_graph(), banks, state, phi0, lam0)
+
+
+@functools.lru_cache(maxsize=None)
+def _fused_step_batch(config: SolverConfig, costfn, donate: bool,
+                      _dispatch_key):
+    def fn(graph, lam_total, state, task_utilities):
+        def one(g, lt, s, u):
+            problem = Problem(graph=g, bank=None, lam_total=lt, cost=costfn)
+            return _solver.step(problem, config, s, u)
+
+        return jax.vmap(one)(graph, lam_total, state, task_utilities)
+
+    return jax.jit(fn, donate_argnums=(2,) if donate else ())
+
+
+def fused_step_batch(config: SolverConfig, *, cost="exp",
+                     donate: bool = False):
+    """``jit(vmap(step))`` over a tenant/instance axis, measured-utility mode.
+
+    Returns ``fn(graph, lam_total, state, task_utilities) ->
+    (SolverState, StepInfo)`` where every argument carries a leading
+    instance axis: ``graph`` is a stacked view
+    (``CECGraphBatch.stacked_graph()``), ``lam_total`` is [K] per-tenant
+    demand (a traced leaf — demand shifts never retrace),
+    ``state`` is a stacked ``SolverState`` (``lam`` [K, W]) and
+    ``task_utilities`` is [K, 2W] measured utilities in
+    ``perturbed_allocations`` row order.  Each lane builds a bank-less
+    ``Problem`` from its slice, exactly like ``_vmapped_run`` — the fleet
+    step *is* the single-tenant step.
+
+    ``donate=True`` donates the stacked ``state`` so the K control
+    iterations update in place (the ``RouterFleet`` steady state,
+    DESIGN.md §15.3).  Cached on ``(config, cost, donate,
+    dispatch.state_key())`` — ``cost`` must be a registry name or a
+    hashable ``CostFn``.
+    """
+    return _fused_step_batch(config, resolve_cost(cost), bool(donate),
+                             dispatch.state_key())
 
 
 def run_batch(

@@ -368,14 +368,14 @@ def run(problem: Problem, config: SolverConfig, *, iters: int,
 # ---------------------------------------------------------------------------
 
 @functools.lru_cache(maxsize=None)
-def _fused_step(config: SolverConfig, _dispatch_key):
+def _fused_step(config: SolverConfig, donate: bool, _dispatch_key):
     def fn(problem: Problem, state: SolverState, task_utilities: Array):
         return step(problem, config, state, task_utilities)
 
-    return jax.jit(fn)
+    return jax.jit(fn, donate_argnums=(1,) if donate else ())
 
 
-def fused_step(config: SolverConfig):
+def fused_step(config: SolverConfig, *, donate: bool = False):
     """``jit(step)`` with ``config`` static, cached on its knobs.
 
     Returns ``fn(problem, state, task_utilities) -> (SolverState,
@@ -386,5 +386,15 @@ def fused_step(config: SolverConfig):
     additionally keyed on ``dispatch.state_key()`` so tracing inside
     ``dispatch.kernel_dispatch``/``sparse_dispatch`` gets a fresh trace
     instead of a stale one (DESIGN.md §11).
+
+    ``donate=True`` donates the ``state`` argument (and only it — the
+    problem's graph leaves are shared, the utilities are the caller's) so
+    XLA writes the new iterates into the old iterates' buffers: the
+    steady-state control loop allocates nothing per interval.  The caller
+    gives up the passed state — any view that must survive the step (the
+    serving plane's published front buffer, DESIGN.md §15.2) has to be a
+    *copy*, never an alias, and backends that decline donation simply
+    fall back to allocate-and-swap (detectable via
+    ``state.lam.is_deleted()`` — see ``tests/test_fleet.py``).
     """
-    return _fused_step(config, dispatch.state_key())
+    return _fused_step(config, bool(donate), dispatch.state_key())

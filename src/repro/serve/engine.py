@@ -1,10 +1,18 @@
 """Batched inference engine with continuous batching + CEC dispatch.
 
-One engine instance per model *version*; requests arrive centrally, the
-CEC router's admission split picks the version (= paper's workload
-allocation λ_w), the replica weights pick the serving device (= routing
-φ).  Decode runs real model steps (reduced configs on CPU; the pjit'd
-production path is exercised by the dry-run).
+One engine instance per model *version*; requests arrive centrally and
+the control plane's published decisions pick where they go: the
+admission split Λ/λ picks the version (= the paper's workload
+allocation λ_w, the ``SolverState.lam`` the fused step maintains), the
+replica weights t_i(w)/λ_w pick the serving device (= the routing
+iterate φ).  Single-tenant those reads come from
+``CECRouter.admission_split()`` / ``replica_weights()`` (driven by
+``ServingSim``, DESIGN.md §11.4); multi-tenant they come from the
+``RouterFleet``'s published ``FleetView`` — the double-buffered front
+the control plane never donates (DESIGN.md §15.2), so engines keep
+serving while the next vmapped control step is in flight.  Decode runs
+real model steps (reduced configs on CPU; the pjit'd production path is
+exercised by the dry-run).
 
 Continuous batching: fixed ``max_batch`` decode slots; finished sequences
 free their slot, queued requests claim slots at every step boundary.
@@ -38,6 +46,18 @@ class Request:
 
 
 class InferenceEngine:
+    """Continuous-batching decode loop for one model version.
+
+    The engine is deliberately control-plane-agnostic: it serves
+    whatever requests are routed to it and exposes throughput
+    (``tokens_served``, drained outputs) — the *measured* signal the
+    control plane's utility callback folds into û(Λ) (the
+    ``CECRouter.control_step`` / ``RouterFleet.control_step`` batched
+    contract, DESIGN.md §11.2).  It never reads solver state; the
+    version/replica decisions were already taken from the published
+    split/weights when a ``Request`` was stamped.
+    """
+
     def __init__(self, cfg: ModelConfig, params: Any, max_batch: int = 8,
                  max_len: int = 128):
         self.cfg = cfg
@@ -52,6 +72,7 @@ class InferenceEngine:
             lambda p, t, c: M.decode_step(cfg, p, t, c))
 
     def submit(self, req: Request):
+        """Queue a request (version/replica already chosen by the router)."""
         if len(req.prompt) > self.max_len:
             raise ValueError(
                 f"prompt length {len(req.prompt)} exceeds the cache window "
@@ -114,6 +135,7 @@ class InferenceEngine:
         return len(active)
 
     def drain(self, max_steps: int = 10_000) -> int:
+        """Decode until queue and slots are empty; returns steps taken."""
         steps = 0
         while (self.queue or any(s is not None for s in self.slots)) \
                 and steps < max_steps:

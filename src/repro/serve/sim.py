@@ -24,6 +24,14 @@ One engine per model version.  Each control interval the sim
 The quality ladder defaults to linspace(1, 2, W), mirroring
 `core.utility.make_bank`: larger versions earn more per token, so the
 router faces the paper's trade-off between task utility and network cost.
+
+`ServingSim` drives ONE tenant synchronously — sim and router alternate.
+The multi-tenant production shape is `serve.fleet.RouterFleet` (DESIGN.md
+§15.5 maps every `ServingSim`/`CECRouter` construct to its fleet
+counterpart): K tenants in one vmapped control step, serving reads
+against the published `FleetView` while the next step runs, demand shaped
+per interval by `serve.traffic` arrival processes instead of this sim's
+fixed `requests_per_interval`.
 """
 from __future__ import annotations
 

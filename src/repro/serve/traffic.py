@@ -1,0 +1,175 @@
+"""Arrival-process generators for the multi-tenant control plane.
+
+The paper's controller is *online*: it tracks the optimum while demand
+changes underneath it.  The scenario engine (DESIGN.md §10) models the
+*infrastructure* side of that non-stationarity — topology churn,
+capacity drift, step demand shifts.  This module models the *traffic*
+side: per-interval, per-tenant arrival intensities for the shapes the
+related work says matter (congestion under bursty admission, arXiv
+2205.00714; reuse-induced load skew under skewed arrivals, arXiv
+2401.03620).
+
+Semantics (DESIGN.md §15.4): a :class:`TrafficTrace` carries
+**multiplicative intensity factors** ``factors[t, k]`` with mean ≈ 1 —
+the *shape* of tenant k's arrival process over ``T`` control intervals,
+never an absolute demand level.  Absolute demand comes from elsewhere
+(a tenant's provisioned ``lam_total``, or the scenario engine's
+``DemandShift`` events via :func:`scenario_base_demand`), and the
+effective per-interval demand is the **product**::
+
+    demand[t, k] = base[t or k or scalar] * factors[t, k]
+
+Keeping level and shape in separate factors is what makes scenario
+events and traces compose without double-counting: a ``DemandShift``
+scales the base, a flash-crowd trace scales the factor, and neither is
+ever folded into the other.
+
+All generators are seeded and deterministic: same arguments, same trace
+(the fixed-seed contract ``tests/test_traffic.py`` pins).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.scenario import DemandShift, Scenario, event_schedule
+
+__all__ = ["TrafficTrace", "poisson_trace", "diurnal_trace",
+           "flash_crowd_trace", "named_traces", "scenario_base_demand"]
+
+
+@dataclasses.dataclass(frozen=True)
+class TrafficTrace:
+    """A named arrival process: [T, K] multiplicative intensity factors."""
+
+    name: str
+    factors: np.ndarray     # [T, K] float32, mean ≈ 1 per tenant
+
+    def __post_init__(self):
+        f = np.asarray(self.factors, np.float32)
+        if f.ndim != 2:
+            raise ValueError(f"factors must be [T, K], got {f.shape}")
+        if (f < 0).any():
+            raise ValueError("intensity factors must be non-negative")
+        object.__setattr__(self, "factors", f)
+
+    @property
+    def horizon(self) -> int:
+        return self.factors.shape[0]
+
+    @property
+    def n_tenants(self) -> int:
+        return self.factors.shape[1]
+
+    def demand(self, base) -> np.ndarray:
+        """[T, K] effective demand = ``base`` × factors.
+
+        ``base`` broadcasts: a scalar (one provisioned level for every
+        tenant), [K] (per-tenant levels), or [T] / [T, 1] (an
+        event-driven base series from :func:`scenario_base_demand` —
+        the no-double-counting composition rule from the module
+        docstring).
+        """
+        base = np.asarray(base, np.float32)
+        if base.ndim == 1 and base.shape[0] == self.horizon \
+                and self.horizon != self.n_tenants:
+            base = base[:, None]
+        return base * self.factors
+
+
+def poisson_trace(horizon: int, n_tenants: int, *, seed: int = 0,
+                  requests_per_interval: float = 400.0) -> TrafficTrace:
+    """Poisson arrivals: iid counts per (interval, tenant), normalized.
+
+    Each factor is ``Poisson(requests_per_interval) /
+    requests_per_interval`` — mean exactly 1, relative fluctuation
+    ``1/sqrt(requests_per_interval)``, so the parameter is the
+    burstiness knob (few requests per control interval → spiky; many →
+    smooth).  Tenants draw independently from one seeded generator.
+    """
+    if requests_per_interval <= 0:
+        raise ValueError("requests_per_interval must be positive")
+    rng = np.random.default_rng(seed)
+    counts = rng.poisson(requests_per_interval, size=(horizon, n_tenants))
+    return TrafficTrace("poisson", counts / requests_per_interval)
+
+
+def diurnal_trace(horizon: int, n_tenants: int, *, period: int = 24,
+                  amplitude: float = 0.5) -> TrafficTrace:
+    """Deterministic day/night cycle, tenants phase-staggered.
+
+    ``factors[t, k] = 1 + amplitude · sin(2π(t/period + k/K))`` — mean 1
+    over any whole period, exactly periodic (``factors[t] ==
+    factors[t + period]``), and the per-tenant phase stagger ``k/K``
+    models tenants in different time zones so fleet-aggregate demand is
+    flatter than any single tenant's.
+    """
+    if not 0 <= amplitude < 1:
+        raise ValueError("amplitude must be in [0, 1) to keep factors > 0")
+    t = np.arange(horizon)[:, None]
+    k = np.arange(n_tenants)[None, :]
+    f = 1.0 + amplitude * np.sin(2 * np.pi * (t / period + k / n_tenants))
+    return TrafficTrace("diurnal", f)
+
+
+def flash_crowd_trace(horizon: int, n_tenants: int, *, at: int,
+                      magnitude: float = 3.0, width: int = 8,
+                      tenant: int | None = 0) -> TrafficTrace:
+    """A sudden spike that decays linearly back to baseline.
+
+    At interval ``at`` the hit tenant's factor jumps to ``magnitude``
+    and decays linearly to 1 over ``width`` intervals:
+    ``excess[i] = (magnitude − 1)(1 − i/width)`` for ``i = 0..width−1``,
+    so the total excess mass is exactly ``(magnitude − 1)(width + 1)/2``
+    (the closed form ``tests/test_traffic.py`` asserts).  ``tenant=None``
+    hits every tenant at once (a correlated, front-page event);
+    otherwise only the indexed tenant spikes while the rest stay flat.
+    """
+    if not 0 <= at < horizon:
+        raise ValueError(f"spike at {at} outside [0, {horizon})")
+    if magnitude < 1 or width < 1:
+        raise ValueError("need magnitude >= 1 and width >= 1")
+    f = np.ones((horizon, n_tenants), np.float32)
+    i = np.arange(min(width, horizon - at))
+    excess = (magnitude - 1.0) * (1.0 - i / width)
+    cols = slice(None) if tenant is None else tenant
+    f[at + i, cols] = (1.0 + excess)[:, None] if tenant is None \
+        else 1.0 + excess
+    return TrafficTrace("flash_crowd", f)
+
+
+def named_traces(horizon: int, n_tenants: int, *, seed: int = 0
+                 ) -> dict[str, TrafficTrace]:
+    """The standard churn suite (benchmarks/tests): one trace per shape."""
+    return {
+        "poisson": poisson_trace(horizon, n_tenants, seed=seed),
+        "diurnal": diurnal_trace(horizon, n_tenants,
+                                 period=max(4, horizon // 4)),
+        "flash_crowd": flash_crowd_trace(
+            horizon, n_tenants, at=horizon // 2,
+            width=max(1, horizon // 8)),
+    }
+
+
+def scenario_base_demand(scenario: Scenario) -> np.ndarray:
+    """[T] event-driven base demand series for one scenario timeline.
+
+    Walks :func:`repro.core.scenario.event_schedule` carrying
+    ``lam_total`` across ``DemandShift`` events — the step function the
+    offline sweeps and the live router both see.  Multiply by a trace's
+    factors (``trace.demand(scenario_base_demand(sc))``) to superimpose
+    an arrival process on the scenario's demand plan; because the trace
+    is a pure shape (mean ≈ 1), the event's step change is applied
+    exactly once.
+    """
+    base = np.empty(scenario.horizon, np.float32)
+    lam_total = scenario.lam_total
+    schedule = event_schedule(scenario)
+    for (start, events), nxt in zip(
+            schedule, [s for s, _ in schedule[1:]] + [scenario.horizon]):
+        for ev in events:
+            if isinstance(ev, DemandShift):
+                lam_total = float(ev.lam_total)
+        base[start:nxt] = lam_total
+    return base

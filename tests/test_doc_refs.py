@@ -1,0 +1,55 @@
+"""The docs-as-CI gate gates (ISSUE 7): the real tree passes, and the
+checker actually fails on a planted broken §-reference / stale tag."""
+import pathlib
+import subprocess
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+SCRIPT = ROOT / "scripts" / "check_doc_refs.py"
+
+# build the markers by concatenation so the checker scanning *this* repo
+# never mistakes the planted fixtures below for live references
+REF = "DESIGN.md " + "§"
+
+
+def _run(*args, cwd=ROOT):
+    return subprocess.run([sys.executable, str(SCRIPT), *args],
+                          capture_output=True, text=True, cwd=cwd)
+
+
+def test_real_tree_passes():
+    out = _run("--src", "src", "--src", "benchmarks")
+    assert out.returncode == 0, out.stderr
+
+
+def test_planted_broken_reference_fails(tmp_path):
+    (tmp_path / "DESIGN.md").write_text(
+        "# doc\n## §1 Real section\n")
+    src = tmp_path / "src"
+    src.mkdir()
+    (src / "ok.py").write_text(f'"""fine ({REF}1)."""\n')
+    assert _run("--design", str(tmp_path / "DESIGN.md"),
+                "--src", str(src)).returncode == 0
+    (src / "bad.py").write_text(f'"""rotten ({REF}99.2)."""\n')
+    out = _run("--design", str(tmp_path / "DESIGN.md"), "--src", str(src))
+    assert out.returncode == 1
+    assert "§99.2" in out.stderr and "bad.py" in out.stderr
+
+
+def test_stale_this_pr_tag_fails(tmp_path):
+    (tmp_path / "DESIGN.md").write_text(
+        "# doc\n"
+        "## §1 Old section (this PR)\n"
+        "## §2 Newer section\n")
+    src = tmp_path / "src"
+    src.mkdir()
+    out = _run("--design", str(tmp_path / "DESIGN.md"), "--src", str(src))
+    assert out.returncode == 1
+    assert "(this PR)" in out.stderr
+    # only the newest section may claim it
+    (tmp_path / "DESIGN.md").write_text(
+        "# doc\n"
+        "## §1 Old section (PR 1)\n"
+        "## §2 Newer section (this PR)\n")
+    assert _run("--design", str(tmp_path / "DESIGN.md"),
+                "--src", str(src)).returncode == 0

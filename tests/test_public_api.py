@@ -31,7 +31,7 @@ PINNED_SIGNATURES = {
     "run": "(problem: 'Problem', config: 'SolverConfig', *, iters: 'int', "
            "state: 'SolverState | None' = None, phi0=None, "
            "lam0: 'Array | None' = None) -> 'Result'",
-    "fused_step": "(config: 'SolverConfig')",
+    "fused_step": "(config: 'SolverConfig', *, donate: 'bool' = False)",
     "run_batch": "(batch: 'CECGraphBatch | CECGraphSparseBatch', "
                  "banks: 'UtilityBank | Sequence[UtilityBank]', lam_total, "
                  "config: 'SolverConfig', *, iters: 'int', cost='exp', "

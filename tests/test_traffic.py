@@ -1,0 +1,107 @@
+"""Traffic-generator contracts (ISSUE 7): determinism, calibration,
+periodicity, spike mass, and event/trace composition (DESIGN.md §15.4)."""
+import numpy as np
+import pytest
+
+from repro.serve.traffic import (TrafficTrace, diurnal_trace,
+                                 flash_crowd_trace, named_traces,
+                                 poisson_trace, scenario_base_demand)
+
+
+def test_fixed_seed_determinism():
+    a = poisson_trace(50, 4, seed=7)
+    b = poisson_trace(50, 4, seed=7)
+    np.testing.assert_array_equal(a.factors, b.factors)
+    c = poisson_trace(50, 4, seed=8)
+    assert (a.factors != c.factors).any()
+    # the deterministic generators are trivially reproducible too
+    np.testing.assert_array_equal(diurnal_trace(50, 4).factors,
+                                  diurnal_trace(50, 4).factors)
+
+
+def test_poisson_mean_rate_within_clt_tolerance():
+    """Factors are Poisson(r)/r: mean 1, sd 1/sqrt(r) per sample.  Over
+    T·K samples the sample mean lands within 5 sigma of 1."""
+    r = 400.0
+    tr = poisson_trace(200, 8, seed=0, requests_per_interval=r)
+    n = tr.factors.size
+    tol = 5.0 / np.sqrt(r * n)
+    assert abs(tr.factors.mean() - 1.0) < tol
+    # per-sample fluctuation is calibrated too (generous 3-sigma-ish band)
+    assert 0.8 / np.sqrt(r) < tr.factors.std() < 1.2 / np.sqrt(r)
+
+
+def test_diurnal_periodicity_and_mean():
+    period = 12
+    tr = diurnal_trace(3 * period, 5, period=period, amplitude=0.4)
+    np.testing.assert_allclose(tr.factors[:period], tr.factors[period:2 * period],
+                               atol=1e-6)
+    np.testing.assert_allclose(tr.factors[:period].mean(0), 1.0, atol=1e-6)
+    # phase stagger: aggregate demand is flatter than any single tenant
+    agg = tr.factors.mean(1)
+    assert agg.std() < tr.factors[:, 0].std() * 0.5
+    assert (tr.factors > 0).all()
+
+
+def test_flash_crowd_spike_mass():
+    mag, width = 3.0, 8
+    tr = flash_crowd_trace(64, 3, at=20, magnitude=mag, width=width, tenant=1)
+    excess = tr.factors - 1.0
+    # only the hit tenant spikes; total excess mass is the closed form
+    assert (excess[:, [0, 2]] == 0).all()
+    np.testing.assert_allclose(excess[:, 1].sum(),
+                               (mag - 1.0) * (width + 1) / 2, rtol=1e-6)
+    assert tr.factors[20, 1] == pytest.approx(mag)
+    assert (tr.factors[20 + width:, 1] == 1.0).all()
+    # correlated variant hits every tenant identically
+    allhit = flash_crowd_trace(64, 3, at=20, magnitude=mag, width=width,
+                               tenant=None)
+    np.testing.assert_array_equal(allhit.factors[:, 0], allhit.factors[:, 2])
+
+
+def test_named_traces_cover_the_suite():
+    traces = named_traces(40, 3, seed=1)
+    assert set(traces) == {"poisson", "diurnal", "flash_crowd"}
+    for tr in traces.values():
+        assert tr.factors.shape == (40, 3)
+
+
+def test_trace_validation():
+    with pytest.raises(ValueError):
+        TrafficTrace("bad", np.ones(5))            # not [T, K]
+    with pytest.raises(ValueError):
+        TrafficTrace("bad", -np.ones((5, 2)))      # negative intensity
+    with pytest.raises(ValueError):
+        flash_crowd_trace(10, 2, at=10)            # spike outside horizon
+
+
+def test_scenario_events_and_trace_compose_without_double_counting():
+    """Effective demand = event-driven base × trace factor.  A DemandShift
+    steps the base exactly once; the trace never re-applies it."""
+    from repro.core.scenario import DemandShift, Scenario
+
+    sc = Scenario("surge", horizon=20,
+                  events=(DemandShift(at=10, lam_total=90.0),),
+                  lam_total=60.0)
+    base = scenario_base_demand(sc)
+    assert base.shape == (20,)
+    assert (base[:10] == 60.0).all() and (base[10:] == 90.0).all()
+
+    tr = diurnal_trace(20, 3, period=10, amplitude=0.3)
+    demand = tr.demand(base)
+    assert demand.shape == (20, 3)
+    # the product form exactly: no hidden rescaling on either side
+    np.testing.assert_allclose(demand, base[:, None] * tr.factors, rtol=1e-7)
+    # the step is the ratio of the bases wherever the trace repeats:
+    # period 10 makes factors[t] == factors[t+10], so the demand ratio
+    # across the event is exactly 90/60 — applied once, not squared
+    np.testing.assert_allclose(demand[10:] / demand[:10], 90.0 / 60.0,
+                               rtol=1e-6)
+
+
+def test_demand_broadcast_shapes():
+    tr = diurnal_trace(6, 3, period=3)
+    assert tr.demand(60.0).shape == (6, 3)
+    np.testing.assert_allclose(tr.demand([10.0, 20.0, 30.0])[:, 2],
+                               30.0 * tr.factors[:, 2], rtol=1e-7)
+    assert tr.demand(np.full(6, 5.0)).shape == (6, 3)

@@ -1,0 +1,138 @@
+"""Learned-utility serving: oracle-call economy vs utility parity (§16).
+
+The operational claim behind ``grad_mode="learned"`` (DESIGN.md §16.2,
+§16.4): once the router's :class:`~repro.core.utility.OnlineFitter`
+earns the switch, a control interval costs **one** measured admission
+instead of 2W+1 — while the achieved network utility stays at the
+sampled controller's level.  This bench runs the claim end-to-end on a
+live ``CECRouter`` pair over the same measured environment (a log
+``UtilityBank`` the controllers can only observe):
+
+* ``sampled`` — the classic two-point controller, 2W+1 measured
+  admissions every interval;
+* ``learned`` — ``grad_policy="auto"``: samples until the fitter's
+  holdout clears, then migrates live to the analytic gradient through
+  the implicit routing layer.
+
+Reported per mode: total and steady-state measured admissions
+("oracle calls" — each is a real traffic perturbation the serving plane
+must admit), final net utility, and utility as a fraction of the *genie*
+(``core.opt_baseline.exact_gradient_allocation`` — true u', no bandit
+feedback).  The smoke bars are the ISSUE acceptance criteria and fail
+the bench loudly:
+
+* learned final utility ≥ ``UTILITY_FLOOR`` (99%) of sampled's;
+* total measured admissions reduced ≥ ``CALL_REDUCTION_FLOOR`` (2×).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import build_random_cec, get_cost, make_bank
+from repro.core.opt_baseline import exact_gradient_allocation
+from repro.serve import CECRouter
+from repro.topo import connected_er
+
+from . import common
+from .common import dump, emit
+
+TRAJECTORY_ROWS = True
+
+UTILITY_FLOOR = 0.99       # learned ≥ 99% of sampled net utility
+CALL_REDUCTION_FLOOR = 2.0  # ≥ 2× fewer measured admissions overall
+
+
+def _environment(*, n, seed):
+    graph = build_random_cec(connected_er(n, 0.35, seed=seed), 3, 10.0,
+                             seed=0)
+    bank = make_bank("log", graph.n_sessions, seed=0)
+
+    def util(lams):
+        lams = np.atleast_2d(np.asarray(lams))
+        return np.asarray(jax.vmap(bank.total)(jnp.asarray(lams)))
+
+    return graph, bank, util
+
+
+def _drive(router, util, intervals):
+    for _ in range(intervals):
+        router.control_step(util)
+    hist = [h for h in router.history if "mode" in h]
+    return {
+        "final_utility": float(np.mean([h["utility"]
+                                        for h in hist[-5:]])),
+        "total_oracle_calls": int(sum(h["oracle_calls"] for h in hist)),
+        "steady_calls_per_interval": int(hist[-1]["oracle_calls"]),
+        "modes": [h["mode"] for h in hist],
+    }
+
+
+def main() -> list[dict]:
+    n_nodes = common.scaled(12, 10)
+    T = common.scaled(150, 80)
+    lam_total = 15.0
+    graph, bank, util = _environment(n=n_nodes, seed=2)
+    W = graph.n_sessions
+
+    # the genie: true marginal utilities, no bandit feedback — the
+    # ceiling both measured controllers chase
+    _, _, u_genie = exact_gradient_allocation(
+        graph, get_cost("exp"), bank, lam_total,
+        outer_iters=common.scaled(300, 120),
+        inner_iters=common.scaled(100, 60))
+    u_genie = float(u_genie)
+
+    results = {}
+    for mode, policy in (("sampled", "sampled"), ("learned", "auto")):
+        router = CECRouter(graph, lam_total=lam_total, grad_policy=policy,
+                           util_family="log")
+        if router.fitter is not None:
+            router.fitter.min_samples = 20
+            router.fitter.refit_every = 8
+            router.fitter.fit_steps = 1500
+            router.fitter.threshold = 0.02
+        results[mode] = _drive(router, util, T)
+
+    rows = []
+    for mode, r in results.items():
+        switch_at = r["modes"].index("learned") \
+            if "learned" in r["modes"] else None
+        rec = {"mode": mode, "intervals": T, "n_sessions": W,
+               "final_utility": r["final_utility"],
+               "utility_vs_genie": r["final_utility"] / u_genie,
+               "total_oracle_calls": r["total_oracle_calls"],
+               "steady_calls_per_interval": r["steady_calls_per_interval"],
+               "switch_interval": switch_at}
+        rows.append(rec)
+        emit(f"learned.{mode}.T{T}", 0.0,
+             f"utility={r['final_utility']:.3f};"
+             f"vs_genie={rec['utility_vs_genie']:.4f};"
+             f"calls={r['total_oracle_calls']}")
+
+    s, l = results["sampled"], results["learned"]
+    reduction = s["total_oracle_calls"] / l["total_oracle_calls"]
+    parity = l["final_utility"] / s["final_utility"]
+    rows.append({"mode": "summary", "call_reduction": reduction,
+                 "utility_parity": parity, "genie_utility": u_genie})
+    emit(f"learned.summary.T{T}", 0.0,
+         f"call_reduction={reduction:.2f}x;parity={parity:.4f}")
+
+    # the ISSUE acceptance bars — a regression here is a broken PR, not
+    # a slow one, so assert instead of reporting
+    assert parity >= UTILITY_FLOOR, (
+        f"learned utility {l['final_utility']:.3f} is below "
+        f"{UTILITY_FLOOR:.0%} of sampled {s['final_utility']:.3f}")
+    assert reduction >= CALL_REDUCTION_FLOOR, (
+        f"oracle-call reduction {reduction:.2f}x is below the "
+        f"{CALL_REDUCTION_FLOOR}x bar "
+        f"({l['total_oracle_calls']} vs {s['total_oracle_calls']} calls)")
+    assert l["steady_calls_per_interval"] == 1
+
+    dump("bench_learned", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -33,7 +33,8 @@ MODULES = ("fig7_routing_convergence", "fig8_9_network_size",
            "fig10_utility_functions", "fig11_single_loop",
            "table2_topologies", "bench_kernels", "bench_batched",
            "bench_scenarios", "bench_router", "bench_sparse",
-           "bench_fleet", "bench_serving", "perf_iterations")
+           "bench_fleet", "bench_serving", "bench_learned",
+           "perf_iterations")
 
 TRAJECTORY_DIR = pathlib.Path("benchmarks/trajectory")
 TRAJECTORY_SCHEMA = 2

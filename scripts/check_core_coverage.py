@@ -41,6 +41,15 @@ GATES = (
     ("repro/parallel/", 25.0, "REPRO_PARALLEL_COV_MIN"),
 )
 
+# per-file floors for the differentiable-core modules (PR 8): the implicit
+# VJP and the hypergradient loop are correctness-critical math whose
+# failure mode is a silently wrong gradient, so they carry their own bar
+# on top of the package aggregate.
+FILE_GATES = (
+    ("repro/core/implicit.py", 85.0),
+    ("repro/core/hypergrad.py", 85.0),
+)
+
 
 def _gate(data: dict, marker: str, floor: float) -> int:
     rows = []
@@ -74,6 +83,21 @@ def _gate(data: dict, marker: str, floor: float) -> int:
     return 0
 
 
+def _file_gate(data: dict, marker: str, floor: float) -> int:
+    for fname, info in data["files"].items():
+        if marker in fname.replace("\\", "/"):
+            pct = info["summary"]["percent_covered"]
+            print(f"{fname:58s} {pct:6.1f}%  (file floor {floor:.1f}%)")
+            if pct < floor:
+                print(f"FAIL: {marker} coverage {pct:.1f}% is below its "
+                      f"per-file floor {floor:.1f}%", file=sys.stderr)
+                return 1
+            return 0
+    print(f"error: no file matching '{marker}' in coverage data",
+          file=sys.stderr)
+    return 2
+
+
 def main(path: str = "coverage.json") -> int:
     data = json.loads(pathlib.Path(path).read_text())
     rc = 0
@@ -81,6 +105,8 @@ def main(path: str = "coverage.json") -> int:
         floor = float(os.environ.get(env, default_floor))
         rc = max(rc, _gate(data, marker, floor))
         print()
+    for marker, floor in FILE_GATES:
+        rc = max(rc, _file_gate(data, marker, floor))
     return rc
 
 

@@ -31,6 +31,8 @@ _CORE_EXPORTS = (
     "CECGraph", "CECGraphSparse", "CECGraphBatch", "UtilityBank",
     "build_random_cec", "build_augmented", "build_augmented_sparse",
     "make_bank", "get_cost", "resolve_cost",
+    "UtilityFamily", "get_family", "fit_utilities", "OnlineFitter",
+    "fixed_point_solve", "tune_etas",
 )
 # names resolved from repro.serve on first access (pulls the model stack)
 _SERVE_EXPORTS = ("CECRouter", "InferenceEngine", "ServingSim")

@@ -11,8 +11,8 @@ engine.
 """
 from . import dispatch, solver
 from .allocation import (ControlStep, JOWRResult, allocation_kkt_residual,
-                         control_step, fused_control_step, gs_oma,
-                         perturbed_allocations)
+                         control_step, exact_allocation_gradient,
+                         fused_control_step, gs_oma, perturbed_allocations)
 from .batch import (CECGraphBatch, CECGraphSparseBatch, pad_graph,
                     pad_sparse_graph, run_batch, run_batch_sharded,
                     solve_jowr_batch, solve_routing_batch, stack_banks)
@@ -22,6 +22,8 @@ from .graph import (CECGraph, CECGraphSparse, InfeasibleTopology,
                     InstanceDraw, SparsePhi, build_augmented,
                     build_augmented_sparse, build_random_cec, draw_instance,
                     sparsify)
+from .hypergrad import TuneResult, rollout_objective, tune_etas
+from .implicit import fixed_point_solve
 from .jowr import solve_jowr
 from .marginal import marginals, phi_gradient
 from .opt_baseline import exact_gradient_allocation, frank_wolfe_routing
@@ -31,14 +33,16 @@ from .solver import (Result, SolverConfig, SolverState, StepInfo, fused_step,
                      serving_defaults, step)
 from .routing import (RoutingState, kkt_residual, omd_step, oracle_observe,
                       project_simplex_masked, sgp_step, solve_routing,
-                      solve_routing_sgp, warm_start_phi)
+                      solve_routing_implicit, solve_routing_sgp,
+                      warm_start_phi)
 from .scenario import (BankSwap, CapacityScale, DemandShift, Event, NodeFail,
                        NodeJoin, Rewire, Scenario, ScenarioResult,
                        ScenarioState, apply_event, compile_segments,
                        event_schedule, initial_state, named_scenarios,
                        run_scenario, scenario_metrics, segment_optima)
 from .single_loop import omad
-from .utility import UtilityBank, make_bank
+from .utility import (OnlineFitter, UtilityBank, UtilityFamily, fit_utilities,
+                      get_family, make_bank, register_family)
 
 __all__ = [
     # the solver core (DESIGN.md §13)
@@ -57,6 +61,11 @@ __all__ = [
     "frank_wolfe_routing", "RoutingState", "kkt_residual", "omd_step",
     "project_simplex_masked", "sgp_step", "solve_routing",
     "solve_routing_sgp", "warm_start_phi", "omad", "UtilityBank", "make_bank",
+    # differentiable solver core (DESIGN.md §16)
+    "fixed_point_solve", "solve_routing_implicit",
+    "UtilityFamily", "get_family", "register_family", "fit_utilities",
+    "OnlineFitter", "exact_allocation_gradient",
+    "TuneResult", "rollout_objective", "tune_etas",
     "CECGraphBatch", "pad_graph", "solve_jowr_batch", "solve_routing_batch",
     "stack_banks", "dispatch",
     "CECGraphSparse", "CECGraphSparseBatch", "SparsePhi",

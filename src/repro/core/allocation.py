@@ -148,12 +148,19 @@ def gs_oma(
     return JOWRResult.from_result(res)
 
 
-def allocation_kkt_residual(graph: CECGraph, cost: CostFn, bank: UtilityBank,
-                            lam: Array, phi: Array) -> Array:
-    """Theorem 1 check: ∂U/∂λ_w must be equal across sessions at Λ*.
+def exact_allocation_gradient(graph: CECGraph, cost: CostFn,
+                              bank: UtilityBank, lam: Array,
+                              phi: Array) -> Array:
+    """The genie gradient ∂U/∂λ_w = u'_w(λ_w) − ∂D/∂r_S(w) at fixed φ.
 
-    Uses the *exact* gradient ∂U/∂λ_w = u'_w(λ_w) − ∂D/∂r_S(w) (only
-    available to tests/benchmarks — the algorithm itself never sees it).
+    Theorem 1's marginal form: the network half reads the source-row
+    marginal costs off one ``core.marginal.marginals`` pass.  Only
+    available to tests/benchmarks (the algorithm never sees u'); it is
+    also the quantity ``solver.step``'s ``grad_mode="learned"`` recovers
+    by differentiating a *fitted* surrogate through the implicit routing
+    layer — the envelope-theorem route to the same marginals
+    (``tests/test_implicit.py`` pins the two against each other at the
+    oracle fixed point).
     """
     from .flow import cost_and_state
     from .marginal import marginals
@@ -161,5 +168,15 @@ def allocation_kkt_residual(graph: CECGraph, cost: CostFn, bank: UtilityBank,
     du = jax.grad(lambda l: bank.per_session(l).sum())(lam)
     _, t, F = cost_and_state(graph, cost, phi, lam)
     _, dDdr = marginals(graph, cost, phi, t, F)
-    g = du - dDdr[:, graph.src]
+    return du - dDdr[:, graph.src]
+
+
+def allocation_kkt_residual(graph: CECGraph, cost: CostFn, bank: UtilityBank,
+                            lam: Array, phi: Array) -> Array:
+    """Theorem 1 check: ∂U/∂λ_w must be equal across sessions at Λ*.
+
+    Max-minus-min of :func:`exact_allocation_gradient` — zero iff the
+    allocation KKT conditions hold on the interior of the box.
+    """
+    g = exact_allocation_gradient(graph, cost, bank, lam, phi)
     return g.max() - g.min()

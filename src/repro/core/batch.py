@@ -377,19 +377,22 @@ def _vmapped_run(batch, banks, lam_total, config, *, iters, costfn,
 
 @functools.lru_cache(maxsize=None)
 def _fused_step_batch(config: SolverConfig, costfn, donate: bool,
-                      _dispatch_key):
-    def fn(graph, lam_total, state, task_utilities):
-        def one(g, lt, s, u):
-            problem = Problem(graph=g, bank=None, lam_total=lt, cost=costfn)
+                      util_family: str | None, _dispatch_key):
+    def fn(graph, lam_total, state, task_utilities, util_params=None):
+        def one(g, lt, s, u, p):
+            problem = Problem(graph=g, bank=None, lam_total=lt, cost=costfn,
+                              util_params=p, util_family=util_family)
             return _solver.step(problem, config, s, u)
 
-        return jax.vmap(one)(graph, lam_total, state, task_utilities)
+        params_axis = None if util_params is None else 0
+        return jax.vmap(one, in_axes=(0, 0, 0, 0, params_axis))(
+            graph, lam_total, state, task_utilities, util_params)
 
     return jax.jit(fn, donate_argnums=(2,) if donate else ())
 
 
 def fused_step_batch(config: SolverConfig, *, cost="exp",
-                     donate: bool = False):
+                     donate: bool = False, util_family: str | None = None):
     """``jit(vmap(step))`` over a tenant/instance axis, measured-utility mode.
 
     Returns ``fn(graph, lam_total, state, task_utilities) ->
@@ -403,14 +406,19 @@ def fused_step_batch(config: SolverConfig, *, cost="exp",
     ``Problem`` from its slice, exactly like ``_vmapped_run`` — the fleet
     step *is* the single-tenant step.
 
+    With ``util_family`` set (and ``config.grad_mode="learned"``) the
+    returned fn accepts a fifth argument: stacked [K, W, P] fitted
+    ``util_params`` — a data leaf, so per-tenant refits never retrace
+    (DESIGN.md §16.4); ``task_utilities`` is then ignored (pass zeros).
+
     ``donate=True`` donates the stacked ``state`` so the K control
     iterations update in place (the ``RouterFleet`` steady state,
-    DESIGN.md §15.3).  Cached on ``(config, cost, donate,
+    DESIGN.md §15.3).  Cached on ``(config, cost, donate, util_family,
     dispatch.state_key())`` — ``cost`` must be a registry name or a
     hashable ``CostFn``.
     """
     return _fused_step_batch(config, resolve_cost(cost), bool(donate),
-                             dispatch.state_key())
+                             util_family, dispatch.state_key())
 
 
 def run_batch(

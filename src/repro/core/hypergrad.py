@@ -1,0 +1,168 @@
+"""Hypergradient meta-tuning of (η_outer, η_inner) (DESIGN.md §16.3).
+
+The two step sizes used to be hand-maintained lore: ``paper_defaults``
+runs the nested oracle gently (η_inner=0.05, K=50) while
+``serving_defaults`` runs the K=1 oracle hot (η_inner=3.0), and the gap
+was documented as "intentional, not drift" with a paragraph of prose.
+This module replaces the prose with a derivation: the steps are *tuned*
+by gradient ascent on what the controller actually maximizes — the tail
+utility of a short solve rollout — differentiated **through the solver
+itself**.
+
+Mechanics.  :func:`rollout_objective` unrolls ``solver.step_with_etas``
+(the fused control iteration with the η's as traced inputs) for a few
+outer iterations and returns the mean utility over the trailing window.
+Every oracle observation inside that rollout runs through the implicit
+fixed-point layer (``core.implicit`` via ``routing.oracle_observe``), so
+reverse-mode differentiation pays the adjoint solve instead of storing
+the inner iteration; :func:`tune_etas` ascends log-η with Adam (log
+parametrization keeps the steps positive and makes the search scale-free
+across the 0.05-vs-3.0 decades).
+
+Honesty about what the gradient is:
+
+* the implicit layer returns a **zero cotangent for the warm-started φ**
+  (``core/implicit.py``), so the hypergradient is truncated in the
+  φ-carry direction — each observation contributes its own η
+  sensitivity, not the sensitivity of the φ trajectory that led to it.
+  This is standard truncated backprop-through-optimization; the
+  objective being a *tail mean* over fresh iterations keeps it a useful
+  ascent direction (``tests/test_hypergrad.py`` checks monotone
+  improvement from deliberately detuned starts).
+* at an *exact* OMD fixed point the η-sensitivity of one more inner step
+  vanishes (the multiplicative weights are uniform on the support), so
+  η_inner's signal comes from the transient — which is precisely the
+  regime the K=1 serving oracle lives in, and why tuning lands hot
+  η_inner for ``method="single"`` and gentle for deep nested oracles.
+* jnp path only: the Pallas kernel bakes η as a static parameter, so
+  ``step_with_etas`` refuses to trace under kernel dispatch (tune on the
+  jnp path, serve the tuned floats on any path).
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import solver as _solver
+from .problem import Problem
+from .solver import SolverConfig, SolverState
+
+__all__ = ["TuneResult", "rollout_objective", "tune_etas"]
+
+
+class TuneResult(NamedTuple):
+    """What meta-tuning produced (trajectories included — the schedule is
+    an artifact worth inspecting, not just a pair of floats)."""
+
+    config: SolverConfig     # the input preset with tuned η's threaded in
+    eta_outer: float
+    eta_inner: float
+    objective: np.ndarray    # [meta_iters + 1] rollout tail utility
+    etas: np.ndarray         # [meta_iters + 1, 2] (η_outer, η_inner) visited
+
+
+def rollout_objective(problem: Problem, config: SolverConfig,
+                      state0: SolverState, log_etas: jnp.ndarray, *,
+                      iters: int, tail: int) -> jnp.ndarray:
+    """Mean utility over the last ``tail`` of ``iters`` outer iterations.
+
+    The meta-objective: a differentiable function of ``log_etas`` ([2] =
+    log(η_outer), log(η_inner)) via the unrolled sampled-gradient loop.
+    Requires ``problem.bank`` (the rollout must price its own
+    observations).  Pure traceable JAX — :func:`tune_etas` jits its
+    value-and-grad once per (config, iters, tail).
+    """
+    if problem.bank is None:
+        raise ValueError("hypergradient rollouts need problem.bank — the "
+                         "meta-objective prices its own observations")
+    eta_outer, eta_inner = jnp.exp(log_etas[0]), jnp.exp(log_etas[1])
+    bank = problem.bank
+
+    def outer(st, _):
+        task_u = jax.vmap(bank.total)(
+            _solver.perturbed_allocations(st.lam, config.delta))
+        st, info = _solver.step_with_etas(problem, config, st, task_u,
+                                          eta_outer, eta_inner)
+        return st, bank.total(st.lam) - info.cost
+
+    _, u_traj = jax.lax.scan(outer, state0, None, length=iters)
+    return u_traj[-tail:].mean()
+
+
+@functools.lru_cache(maxsize=None)
+def _meta_program(config: SolverConfig, iters: int, tail: int,
+                  meta_lr: float):
+    """Jitted Adam ascent step on log-η (cached per meta setup)."""
+
+    def objective(log_etas, problem, state0):
+        return rollout_objective(problem, config, state0, log_etas,
+                                 iters=iters, tail=tail)
+
+    def ascend(log_etas, m, v, t, problem, state0):
+        val, g = jax.value_and_grad(objective)(log_etas, problem, state0)
+        b1, b2, eps = 0.9, 0.999, 1e-8
+        m = b1 * m + (1.0 - b1) * g
+        v = b2 * v + (1.0 - b2) * g * g
+        mh = m / (1.0 - b1 ** t)
+        vh = v / (1.0 - b2 ** t)
+        new = log_etas + meta_lr * mh / (jnp.sqrt(vh) + eps)   # ascent
+        return new, m, v, val
+
+    return jax.jit(ascend)
+
+
+def tune_etas(problem: Problem, config: SolverConfig | None = None, *,
+              meta_iters: int = 20, rollout_iters: int = 10, tail: int = 4,
+              meta_lr: float = 0.25) -> TuneResult:
+    """Meta-tune the preset's (η_outer, η_inner) for ``problem``.
+
+    Starts from ``config``'s current steps (default
+    ``solver.serving_defaults()``), ascends the rollout-tail utility by
+    hypergradient for ``meta_iters`` Adam steps, and returns the preset
+    with the best-seen η's threaded in — ``tune_etas(problem,
+    paper_defaults()).config`` is a drop-in replacement wherever a
+    ``SolverConfig`` goes (the tuned values are Python floats, so the
+    config stays hashable and jit-static).
+
+    Each meta step re-rolls from the same fresh ``solver.init`` state:
+    the objective compares step sizes on identical footing instead of
+    chasing a moving warm start.
+    """
+    if config is None:
+        config = _solver.serving_defaults()
+    prob = problem.canonical().validate()
+    state0 = _solver.init(prob, config)
+    log_etas = jnp.log(jnp.asarray(
+        [config.eta_outer, config.eta_inner], jnp.float32))
+    ascend = _meta_program(config, int(rollout_iters), int(tail),
+                           float(meta_lr))
+
+    m = jnp.zeros(2, jnp.float32)
+    v = jnp.zeros(2, jnp.float32)
+    objective, etas = [], [np.exp(np.asarray(log_etas))]
+    for t in range(meta_iters):
+        log_etas, m, v, val = ascend(log_etas, m, v, float(t + 1),
+                                     prob, state0)
+        objective.append(float(val))
+        etas.append(np.exp(np.asarray(log_etas)))
+    # score the final candidate too, then keep the best-seen pair — meta
+    # ascent may overshoot on its last step and the caller gets a config,
+    # not a trajectory
+    final = float(rollout_objective(prob, config, state0,
+                                    jnp.log(jnp.asarray(etas[-1])),
+                                    iters=int(rollout_iters),
+                                    tail=int(tail)))
+    objective.append(final)
+    # objective[i] was evaluated AT etas[i] (value-and-grad reads the
+    # pre-update point), so the two arrays align index-for-index
+    best = int(np.argmax(objective))
+    eta_outer, eta_inner = (float(x) for x in etas[best])
+    tuned = config.replace(eta_outer=eta_outer, eta_inner=eta_inner)
+    return TuneResult(config=tuned, eta_outer=eta_outer,
+                      eta_inner=eta_inner,
+                      objective=np.asarray(objective, np.float32),
+                      etas=np.asarray(etas, np.float32))

@@ -1,0 +1,131 @@
+"""Implicit fixed-point layer: differentiate *through* the solver (DESIGN.md §16.1).
+
+The routing oracle 𝔒 (``routing.oracle_observe``) iterates a contraction
+``x ← f(x, θ)`` toward its fixed point x*(θ).  Differentiating the
+unrolled iteration is memory-hungry (O(K) residuals) and, worse, couples
+the gradient to the truncation; the implicit function theorem gives the
+exact equilibrium sensitivity from the fixed point alone:
+
+    x* = f(x*, θ)   ⇒   ∂x*/∂θ = (I − ∂f/∂x)⁻¹ · ∂f/∂θ
+
+:func:`fixed_point_solve` packages this as a ``jax.custom_vjp``:
+
+* **forward** — the *same* jitted ``lax.scan`` of ``f`` the solver has
+  always run (the carry path is bit-identical to the pre-§16 scan, which
+  is why the golden trace did not move when ``oracle_observe`` was wired
+  through here);
+* **backward** — a linearized adjoint solve: the cotangent system
+  ``v = x̄ + (∂f/∂x)ᵀ v`` is itself a contraction and is iterated with
+  the Neumann series (``bwd_iters`` terms), after which one VJP of ``f``
+  at the fixed point maps ``v`` onto the θ-cotangents.  No forward
+  residuals are stored — backward memory is O(1) in ``n_iters``.
+
+This is what makes ``solver.run``'s :class:`~repro.core.solver.Result`
+differentiable w.r.t. every :class:`~repro.core.problem.Problem` leaf
+(``lam_total``, link capacities, utility parameters): the learned
+gradient mode (``grad_mode="learned"``, DESIGN.md §16.2) takes
+``jax.grad`` of the network cost at the routing fixed point instead of
+paying 2W two-point oracle perturbations per interval, and the
+hypergradient loop (``core/hypergrad.py``, DESIGN.md §16.3) backprops
+its meta-loss through the same layer.
+
+Caveats, stated rather than hidden:
+
+* the cotangent returned for ``x0`` is **zero** — the IFT treats the
+  solve's output as the equilibrium, which by definition forgets the
+  warm start.  Rollouts that carry φ across observations are therefore
+  truncated-backprop in the φ direction (exact as the oracle converges).
+* the backward pass linearizes ``f`` at the *returned* iterate.  With a
+  generous ``n_iters`` that iterate is the fixed point and the gradient
+  is exact (``tests/test_implicit.py`` pins it against finite
+  differences at ≤1e-4); with serving's K=1 oracle it is the standard
+  one-step equilibrium approximation.
+* ``f`` must be differentiable JAX — the Pallas kernel path has no VJP,
+  so learned/hypergradient consumers run the jnp expressions (the
+  default everywhere off-TPU; see DESIGN.md §9.2).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["fixed_point_solve"]
+
+_tree_map = jax.tree_util.tree_map
+
+
+def _iterate(f: Callable, n_iters: int, x0, args):
+    """``x_{k+1} = f(x_k, *args)`` scanned ``n_iters`` times (jit-friendly)."""
+
+    def body(x, _):
+        return f(x, *args), None
+
+    x, _ = jax.lax.scan(body, x0, None, length=n_iters)
+    return x
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2))
+def _fixed_point(f, n_iters: int, bwd_iters: int, x0, args):
+    return _iterate(f, n_iters, x0, args)
+
+
+def _fixed_point_fwd(f, n_iters, bwd_iters, x0, args):
+    x_star = _iterate(f, n_iters, x0, args)
+    return x_star, (x_star, args)
+
+
+def _fixed_point_bwd(f, n_iters, bwd_iters, res, x_bar):
+    x_star, args = res
+    # adjoint solve: v = x̄ + (∂f/∂x)ᵀ v, iterated as a Neumann series —
+    # the same contraction that made the forward converge makes this one
+    _, vjp_x = jax.vjp(lambda x: f(x, *args), x_star)
+
+    def body(v, _):
+        (jtv,) = vjp_x(v)
+        return _tree_map(jnp.add, x_bar, jtv), None
+
+    v, _ = jax.lax.scan(body, x_bar, None, length=bwd_iters)
+    # one VJP of f at the equilibrium maps the adjoint onto the θ-cotangents
+    _, vjp_args = jax.vjp(lambda a: f(x_star, *a), args)
+    (args_bar,) = vjp_args(v)
+    # the IFT forgets the warm start: zero cotangent for x0 (module docstring)
+    x0_bar = _tree_map(jnp.zeros_like, x_star)
+    return x0_bar, args_bar
+
+
+_fixed_point.defvjp(_fixed_point_fwd, _fixed_point_bwd)
+
+
+def fixed_point_solve(f: Callable, x0, *args: Any, n_iters: int,
+                      bwd_iters: int | None = None):
+    """Iterate ``x ← f(x, *args)`` with an implicit-function-theorem VJP.
+
+    Parameters
+    ----------
+    f:
+        The iteration map ``f(x, *args) -> x`` — a contraction toward the
+        fixed point on the region of interest.  Must not close over
+        traced values (pass them through ``args``, where they pick up
+        gradients; ``jax.custom_vjp`` rejects closed-over tracers).
+    x0:
+        Initial iterate (any pytree of float arrays).  Receives a ZERO
+        cotangent — see the module docstring.
+    args:
+        Differentiable parameters of the map; gradients flow to every
+        float leaf (integer/bool leaves get symbolic zeros).
+    n_iters:
+        Forward iterations.  The forward value is exactly the ``n_iters``-
+        step scan — truncation is the caller's contract, the VJP assumes
+        the result is (close to) the fixed point.
+    bwd_iters:
+        Neumann terms of the adjoint solve (default: ``n_iters``).
+
+    Works under ``jit``/``vmap``/``lax.scan``; reverse-mode only (the
+    custom VJP has no JVP rule).
+    """
+    return _fixed_point(f, int(n_iters),
+                        int(n_iters if bwd_iters is None else bwd_iters),
+                        x0, args)

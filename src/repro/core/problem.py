@@ -57,8 +57,8 @@ def resolve_cost(cost: CostFn | str) -> CostFn:
 # fields passed explicitly: the metadata-inferring decorator form needs
 # jax >= 0.4.36, and the CI matrix keeps a 0.4.30 leg
 @functools.partial(jax.tree_util.register_dataclass,
-                   data_fields=("graph", "bank", "lam_total"),
-                   meta_fields=("cost",))
+                   data_fields=("graph", "bank", "lam_total", "util_params"),
+                   meta_fields=("cost", "util_family"))
 @dataclasses.dataclass(frozen=True)
 class Problem:
     """One JOWR instance: graph + utility bank + cost model + demand.
@@ -68,6 +68,14 @@ class Problem:
     ``solver.step``); ``solver.run`` requires a bank — it has nobody else
     to ask.  ``lam_total`` is a pytree *leaf* (python float or jnp
     scalar) so jitted consumers treat demand as data.
+
+    ``util_family``/``util_params`` carry a *fitted* parametric utility
+    surrogate (``utility.get_family`` / ``fit_utilities``, DESIGN.md
+    §16.2): the family name is static metadata, the [W, P] raw params are
+    a data leaf — so a serving router swapping in freshly fitted params
+    every few intervals never retraces, exactly like a demand shift.
+    ``solver.step`` with ``grad_mode="learned"`` differentiates this
+    surrogate (falling back to ``bank`` when no surrogate is attached).
     """
 
     graph: CECGraph | CECGraphSparse
@@ -75,12 +83,17 @@ class Problem:
     lam_total: jax.Array | float = 0.0
     cost: CostFn = dataclasses.field(
         default=_costs.EXP, metadata=dict(static=True))
+    util_params: jax.Array | None = None
+    util_family: str | None = dataclasses.field(
+        default=None, metadata=dict(static=True))
 
     @classmethod
-    def create(cls, graph, bank=None, *, lam_total, cost="exp") -> "Problem":
+    def create(cls, graph, bank=None, *, lam_total, cost="exp",
+               util_params=None, util_family=None) -> "Problem":
         """Validated constructor; ``cost`` may be a registry name."""
         return cls(graph=graph, bank=bank, lam_total=lam_total,
-                   cost=resolve_cost(cost)).validate()
+                   cost=resolve_cost(cost), util_params=util_params,
+                   util_family=util_family).validate()
 
     # -- invariants ----------------------------------------------------------
     def validate(self) -> "Problem":
@@ -102,6 +115,17 @@ class Problem:
             raise ValueError(
                 f"utility bank is for {self.bank.a.shape[-1]} sessions but "
                 f"the graph serves W={W}")
+        if self.util_family is not None:
+            from .utility import get_family
+
+            family = get_family(self.util_family)   # raises listing registry
+            if (self.util_params is not None
+                    and hasattr(self.util_params, "shape")
+                    and self.util_params.shape[-2:] != (W, family.n_params)):
+                raise ValueError(
+                    f"util_params for family {family.name!r} must be "
+                    f"[W={W}, P={family.n_params}], got "
+                    f"{self.util_params.shape}")
         if not isinstance(self.lam_total, jax.core.Tracer):
             import numpy as np
 
@@ -134,3 +158,17 @@ class Problem:
     def with_demand(self, lam_total) -> "Problem":
         """Same instance under a new total demand (a leaf — no retrace)."""
         return dataclasses.replace(self, lam_total=lam_total)
+
+    def with_utilities(self, family: str, params) -> "Problem":
+        """Attach (or refresh) a fitted utility surrogate.
+
+        ``params`` is a data leaf: refitting and re-attaching every few
+        intervals reuses the compiled step — only a *family* change (new
+        static metadata) retraces.
+        """
+        from .utility import get_family
+
+        return dataclasses.replace(
+            self, util_family=get_family(family).name,
+            util_params=jax.numpy.asarray(params, jax.numpy.float32)
+            if not isinstance(params, jax.core.Tracer) else params).validate()

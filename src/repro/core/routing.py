@@ -123,6 +123,54 @@ def solve_routing(graph: CECGraph | CECGraphSparse, cost: CostFn, lam: Array,
     return phi, traj
 
 
+def solve_routing_implicit(graph: CECGraph | CECGraphSparse, cost: CostFn,
+                           lam: Array, phi0, eta, n_iters: int, *,
+                           bwd_iters: int | None = None):
+    """:func:`solve_routing`'s iteration as an implicit layer (DESIGN.md §16.1).
+
+    Forward is the identical ``n_iters``-step OMD-RT scan (same carry, no
+    per-iteration cost emission — callers price the final iterate), so the
+    value is bit-for-bit what :func:`solve_routing` returns; backward is
+    ``core.implicit.fixed_point_solve``'s adjoint solve at the returned
+    iterate, making φ* differentiable w.r.t. ``lam``, ``eta`` and the
+    graph's float leaves (capacities, masks).  Same representation policy
+    as :func:`solve_routing` (dense past the sparse threshold converts both
+    ways; the conversions are gathers/scatters, so gradients flow through).
+    Returns only φ (no cost trajectory — the scan emits nothing).
+    """
+    from .implicit import fixed_point_solve
+
+    sgraph = dispatch.maybe_sparsify(graph, phi0)
+    if sgraph is not graph:
+        from . import sparse
+
+        phi = solve_routing_implicit(sgraph, cost, lam,
+                                     sparse.phi_to_sparse(sgraph, phi0),
+                                     eta, n_iters, bwd_iters=bwd_iters)
+        return sparse.phi_to_dense(sgraph, phi)
+
+    # cost is a static registry singleton (part of the trace) — safe to
+    # close over; everything traced rides in args and picks up gradients.
+    # A concrete η is closed over too: the Pallas kernel path bakes η as
+    # a static parameter (float(eta) inside omd_step), so only a traced η
+    # — the hypergradient loop, which refuses kernel dispatch — rides in
+    # args (and is then differentiable).
+    if isinstance(eta, jax.core.Tracer):
+        def omd_map(phi, graph, lam, eta):
+            return omd_step(graph, cost, phi, lam, eta).phi
+
+        return fixed_point_solve(omd_map, phi0, graph, lam, eta,
+                                 n_iters=n_iters, bwd_iters=bwd_iters)
+
+    eta_static = float(eta)
+
+    def omd_map_static(phi, graph, lam):
+        return omd_step(graph, cost, phi, lam, eta_static).phi
+
+    return fixed_point_solve(omd_map_static, phi0, graph, lam,
+                             n_iters=n_iters, bwd_iters=bwd_iters)
+
+
 def oracle_observe(graph: CECGraph, cost: CostFn, lam: Array, phi: Array,
                    eta: float, n_iters: int) -> tuple[Array, Array]:
     """Admit ``lam``, run the oracle 𝔒, price what it served.
@@ -135,8 +183,14 @@ def oracle_observe(graph: CECGraph, cost: CostFn, lam: Array, phi: Array,
     control iteration (``core.solver.step`` — offline scans, batched
     ensembles and the serving router alike) goes through here, so there
     is exactly one definition of "what an observation does to φ".
+
+    The solve runs through :func:`solve_routing_implicit`, so the returned
+    (φ', D) are differentiable w.r.t. (Λ, η, graph) — the learned gradient
+    mode and the hypergradient loop take ``jax.grad`` of exactly this
+    observation (DESIGN.md §16).  Forward-only consumers see the same
+    scan as always.
     """
-    phi, _ = solve_routing(graph, cost, lam, phi, eta, n_iters)
+    phi = solve_routing_implicit(graph, cost, lam, phi, eta, n_iters)
     return phi, total_cost(graph, cost, phi, lam)
 
 

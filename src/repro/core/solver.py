@@ -52,6 +52,9 @@ Array = jnp.ndarray
 Method = Literal["nested", "single"]
 METHODS = ("nested", "single")
 
+GradMode = Literal["sampled", "learned"]
+GRAD_MODES = ("sampled", "learned")
+
 
 # ---------------------------------------------------------------------------
 # configuration
@@ -66,6 +69,14 @@ class SolverConfig:
     (:attr:`oracle_iters` is the resolved count).  ``eta_inner`` must be
     a Python float — it is a static parameter of the Pallas kernel path
     (DESIGN.md §9.2).
+
+    ``grad_mode`` selects the outer gradient estimator (DESIGN.md §16.2):
+    ``"sampled"`` is the paper's 2W two-point perturbation sweep (2W+1
+    oracle observations per iteration); ``"learned"`` differentiates a
+    fitted utility surrogate (``Problem.util_family``/``util_params``, or
+    a closed-form ``bank``) through the implicit routing fixed point —
+    one analytic gradient evaluation + the committed observation, 2
+    oracle calls per iteration.
     """
 
     method: Method = "single"
@@ -73,12 +84,17 @@ class SolverConfig:
     eta_outer: float = 0.05       # mirror-ascent step on Λ (eq. (10))
     eta_inner: float = 0.05       # OMD-RT step on φ (eq. (22))
     inner_iters: int = 50         # oracle steps per observation (nested)
+    grad_mode: GradMode = "sampled"  # outer gradient estimator (§16.2)
 
     def __post_init__(self):
         if self.method not in METHODS:
             raise ValueError(
                 f"unknown method {self.method!r}: valid methods are "
                 f"{METHODS}")
+        if self.grad_mode not in GRAD_MODES:
+            raise ValueError(
+                f"unknown grad_mode {self.grad_mode!r}: valid modes are "
+                f"{GRAD_MODES}")
         if not self.delta > 0:
             raise ValueError(f"delta must be positive, got {self.delta}")
         if self.inner_iters < 1:
@@ -105,24 +121,30 @@ class SolverConfig:
 
 def paper_defaults() -> SolverConfig:
     """The published offline defaults (`solve_jowr`/`gs_oma` signatures):
-    nested loop, gentle inner step η_inner=0.05, K=50 oracle steps."""
+    nested loop, gentle inner step η_inner=0.05, K=50 oracle steps,
+    sampled (two-point) gradients — the paper's information structure."""
     return SolverConfig(method="nested", delta=0.5, eta_outer=0.05,
-                        eta_inner=0.05, inner_iters=50)
+                        eta_inner=0.05, inner_iters=50,
+                        grad_mode="sampled")
 
 
 def serving_defaults() -> SolverConfig:
     """The live control plane's defaults (`CECRouter`): single-loop OMAD
-    with the aggressive η_inner=3.0 single-step oracle.
+    with the η_inner=3.0 single-step oracle, sampled gradients (a fresh
+    router has no fitted surrogate — it migrates to ``grad_mode=
+    "learned"`` live once its ``OnlineFitter`` is ready, DESIGN.md
+    §16.4).
 
-    The η_inner divergence from :func:`paper_defaults` is intentional,
-    not drift: with K=1 the routing iterate gets exactly one
-    exponentiated-gradient step per observation, so the serving plane
-    runs it hot (3.0) to track churn, while the nested offline solver
-    takes many small steps (0.05) per observation toward the oracle
-    fixed point.
+    The η_inner gap from :func:`paper_defaults` (3.0 vs 0.05) is no
+    longer hand-maintained lore: ``core.hypergrad.tune_etas`` meta-tunes
+    both step sizes by hypergradient through the implicit routing layer
+    (DESIGN.md §16.3) and lands in this regime — a K=1 oracle needs a
+    hot inner step to track churn, a nested K=50 oracle wants many small
+    steps.  These literals record that operating point; re-derive them
+    for a new topology with ``tune_etas(problem, serving_defaults())``.
     """
     return SolverConfig(method="single", delta=0.5, eta_outer=0.05,
-                        eta_inner=3.0, inner_iters=1)
+                        eta_inner=3.0, inner_iters=1, grad_mode="sampled")
 
 
 # ---------------------------------------------------------------------------
@@ -254,25 +276,29 @@ def init(problem: Problem, config: SolverConfig, *,
     return SolverState(lam=lam, phi=phi, t=jnp.int32(0))
 
 
-def step(problem: Problem, config: SolverConfig, state: SolverState,
-         task_utilities: Array) -> tuple[SolverState, StepInfo]:
-    """One fused outer iteration of GS-OMA/OMAD on the current iterates.
+def _mirror_ascent(lam: Array, g: Array, lam_total, eta_outer,
+                   delta: float) -> Array:
+    """Online mirror ascent on the scaled simplex (eq. (10)) + the exact
+    box-simplex projection — the one update site both gradient modes and
+    the hypergradient rollout share."""
+    z = eta_outer * g
+    z = z - z.max()
+    w = lam * jnp.exp(z)
+    lam_new = lam_total * w / w.sum()
+    return project_box_simplex(lam_new, lam_total, delta)
 
-    ``task_utilities`` is the [2W] vector of *task* utilities Σ_w u_w(λ_w)
-    observed for the perturbed admissions of :func:`perturbed_allocations`
-    (same row order); the network-cost half of each observation is computed
-    here, at the routing iterate the oracle reached for that admission.
-    The scan carries φ through all 2W observations (one oracle invocation
-    each), takes the mirror-ascent step, projects exactly onto the
-    box-simplex, then observes once more at the committed allocation so
-    the returned (Λ, φ, cost) are mutually consistent — the paper's
-    U(Λ^t, φ^t).  Pure traceable JAX: :func:`run` scans it, the batch
-    engine vmaps it, :func:`fused_step` jits it for the serving router.
-    """
+
+def _sampled_step(problem: Problem, config: SolverConfig, state: SolverState,
+                  task_utilities: Array, eta_outer,
+                  eta_inner) -> tuple[SolverState, StepInfo]:
+    """The two-point estimator body (Alg. 1/3): 2W perturbed observations
+    scanned with φ carried through, then commit.  η's are explicit so
+    :func:`step_with_etas` can trace them (hypergradient rollouts) while
+    :func:`step` passes the config's static floats."""
     graph, cost = problem.graph, problem.cost
     lam, phi = state.lam, state.phi
     lam_total = problem.lam_total
-    delta, eta_inner = config.delta, config.eta_inner
+    delta = config.delta
     K = config.oracle_iters
     W = graph.n_sessions
     signs, dirs = _perturbation_basis(W)
@@ -287,15 +313,108 @@ def step(problem: Problem, config: SolverConfig, state: SolverState,
 
     (g, phi), _ = jax.lax.scan(observe, (jnp.zeros(W), phi),
                                (signs, dirs, task_utilities))
-    # online mirror ascent on the scaled simplex (eq. (10))
-    z = config.eta_outer * g
-    z = z - z.max()
-    w = lam * jnp.exp(z)
-    lam_new = lam_total * w / w.sum()
-    lam_new = project_box_simplex(lam_new, lam_total, delta)
+    lam_new = _mirror_ascent(lam, g, lam_total, eta_outer, delta)
     phi, D = oracle_observe(graph, cost, lam_new, phi, eta_inner, K)
     return (SolverState(lam=lam_new, phi=phi, t=state.t + 1),
             StepInfo(grad=g, cost=D))
+
+
+def _task_value_fn(problem: Problem):
+    """λ ↦ Σ_w u_w(λ_w) for the learned gradient: the fitted surrogate
+    when one is attached, else the closed-form bank (genie-gradient
+    operation — tests/benchmarks), else a loud error."""
+    if problem.util_family is not None and problem.util_params is not None:
+        from .utility import get_family
+
+        family = get_family(problem.util_family)
+        params = problem.util_params
+        return lambda lam: family.total(params, lam)
+    if problem.bank is not None:
+        return lambda lam: problem.bank.per_session(lam).sum()
+    raise ValueError(
+        "grad_mode='learned' needs task utilities it can differentiate: "
+        "attach a fitted surrogate (Problem.with_utilities / "
+        "utility.fit_utilities) or a closed-form bank — a measured-utility "
+        "problem with neither must run grad_mode='sampled'")
+
+
+def _learned_step(problem: Problem, config: SolverConfig, state: SolverState,
+                  task_utilities: Array) -> tuple[SolverState, StepInfo]:
+    """The analytic-gradient body (DESIGN.md §16.2): one ``jax.grad`` of
+    U(Λ) = Σ u_w(λ_w) − D(Λ, φ*(Λ)) through the implicit routing fixed
+    point (``core.implicit``), then the same mirror-ascent/projection/
+    commit as the sampled path.  2 oracle invocations per iteration — the
+    gradient's fixed-point solve and the committed observation — versus
+    the sampled path's 2W+1.  ``task_utilities`` is unused (the surrogate
+    replaces the perturbation sweep); callers pass zeros.
+    """
+    del task_utilities
+    graph, cost = problem.graph, problem.cost
+    task_value = _task_value_fn(problem)
+    lam, phi = state.lam, state.phi
+    eta_inner = config.eta_inner
+    K = config.oracle_iters
+
+    # envelope form of the paper's Theorem-1 gradient: at the oracle's
+    # fixed point ∂U/∂λ_w = u'_w(λ_w) − ∂D/∂λ_w |_{φ*}; away from it the
+    # implicit VJP's linearization at the returned iterate is the K-step
+    # approximation (core/implicit.py caveats)
+    def net_utility(lam_in):
+        phi1, D = oracle_observe(graph, cost, lam_in, phi, eta_inner, K)
+        return task_value(lam_in) - D, phi1
+
+    g, phi = jax.grad(net_utility, has_aux=True)(lam)
+    lam_new = _mirror_ascent(lam, g, problem.lam_total, config.eta_outer,
+                             config.delta)
+    phi, D = oracle_observe(graph, cost, lam_new, phi, eta_inner, K)
+    return (SolverState(lam=lam_new, phi=phi, t=state.t + 1),
+            StepInfo(grad=g, cost=D))
+
+
+def step(problem: Problem, config: SolverConfig, state: SolverState,
+         task_utilities: Array) -> tuple[SolverState, StepInfo]:
+    """One fused outer iteration of GS-OMA/OMAD on the current iterates.
+
+    ``task_utilities`` is the [2W] vector of *task* utilities Σ_w u_w(λ_w)
+    observed for the perturbed admissions of :func:`perturbed_allocations`
+    (same row order); the network-cost half of each observation is computed
+    here, at the routing iterate the oracle reached for that admission.
+    The scan carries φ through all 2W observations (one oracle invocation
+    each), takes the mirror-ascent step, projects exactly onto the
+    box-simplex, then observes once more at the committed allocation so
+    the returned (Λ, φ, cost) are mutually consistent — the paper's
+    U(Λ^t, φ^t).  Pure traceable JAX: :func:`run` scans it, the batch
+    engine vmaps it, :func:`fused_step` jits it for the serving router.
+
+    With ``config.grad_mode="learned"`` the perturbation sweep is replaced
+    by one analytic gradient through the implicit routing layer
+    (``task_utilities`` is ignored — pass zeros); the dispatch is static,
+    so each mode compiles its own lean program.
+    """
+    if config.grad_mode == "learned":
+        return _learned_step(problem, config, state, task_utilities)
+    return _sampled_step(problem, config, state, task_utilities,
+                         config.eta_outer, config.eta_inner)
+
+
+def step_with_etas(problem: Problem, config: SolverConfig,
+                   state: SolverState, task_utilities: Array, eta_outer,
+                   eta_inner) -> tuple[SolverState, StepInfo]:
+    """:func:`step` with *traced* step sizes — the hypergradient surface.
+
+    ``core.hypergrad`` differentiates rollouts of this function w.r.t.
+    (η_outer, η_inner); the config's own η fields are ignored.  jnp path
+    only: the Pallas kernel path bakes η as a static kernel parameter
+    (``float(eta)``), so meta-tuning under kernel dispatch is refused
+    loudly rather than failing inside a trace (DESIGN.md §16.3).
+    """
+    if dispatch.use_kernels(problem.graph.n_bar):
+        raise NotImplementedError(
+            "step_with_etas traces η through the OMD update, but the "
+            "Pallas kernel path needs a static Python-float η — run "
+            "hypergradient tuning with kernel dispatch off (jnp path)")
+    return _sampled_step(problem, config, state, task_utilities,
+                         eta_outer, eta_inner)
 
 
 def run(problem: Problem, config: SolverConfig, *, iters: int,
@@ -313,11 +432,14 @@ def run(problem: Problem, config: SolverConfig, *, iters: int,
     ``phi``/``state`` — the representation never leaks to the caller.
     """
     bank = problem.bank
-    if bank is None:
+    has_surrogate = (problem.util_family is not None
+                     and problem.util_params is not None)
+    if bank is None and not (config.grad_mode == "learned" and has_surrogate):
         raise ValueError(
             "solver.run needs problem.bank for task utilities; "
             "measured-utility consumers (no bank) drive solver.step with "
-            "observed [2W] vectors instead")
+            "observed [2W] vectors instead (or attach a fitted surrogate "
+            "via Problem.with_utilities and run grad_mode='learned')")
     if state is not None and (phi0 is not None or lam0 is not None):
         raise ValueError(
             "pass either state= (continue a previous run) or phi0=/lam0= "
@@ -342,14 +464,25 @@ def run(problem: Problem, config: SolverConfig, *, iters: int,
             st = st._replace(phi=_sparse.phi_to_sparse(prob.graph, st.phi))
     converted = prob.graph is not dense_in
 
+    W = prob.graph.n_sessions
+    # the recorded U_t prices the *true* environment when one is visible
+    # (a bank), else the surrogate — both evaluate at the committed Λ
+    record_value = (bank.total if bank is not None
+                    else _task_value_fn(prob))
+
     def outer(st, _):
-        task_u = jax.vmap(bank.total)(
-            perturbed_allocations(st.lam, config.delta))
+        if config.grad_mode == "learned":
+            # the surrogate replaces the perturbation sweep — no bank
+            # evaluations, and step ignores the zeros
+            task_u = jnp.zeros((2 * W,), jnp.float32)
+        else:
+            task_u = jax.vmap(bank.total)(
+                perturbed_allocations(st.lam, config.delta))
         st, info = step(prob, config, st, task_u)
         # the recorded U_t is the paper's U(Λ^t, φ^t): task utility and
         # network cost both evaluated at the *committed* iterates, not at
         # the last perturbed observation
-        U_t = bank.total(st.lam) - info.cost
+        U_t = record_value(st.lam) - info.cost
         return st, (U_t, st.lam, info.cost, info.grad)
 
     st, (u_traj, lam_traj, cost_traj, grad_traj) = jax.lax.scan(

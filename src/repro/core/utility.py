@@ -1,19 +1,40 @@
-"""Unknown task-utility functions u_w(λ_w) (paper §II-B, Assumptions 1–3).
+"""Task utilities u_w(λ_w): hidden closed forms AND learnable families.
 
-The allocator never sees these closed forms — it only receives scalar
-observations U(Λ, φ) (bandit feedback), exactly the paper's information
-structure.  The four families match the paper's §IV evaluation:
+Two layers, one information structure (paper §II-B, Assumptions 1–3):
+
+**The hidden environment** — :class:`UtilityBank` / :func:`make_bank`, the
+paper's §IV closed forms.  The allocator never sees these; it only
+receives scalar observations U(Λ, φ) (bandit feedback):
 
   linear     u = a·λ
   sqrt       u = a·(√(λ + b) − √b)
   quadratic  u = −a·λ² + b·λ     (params chosen monotone on [0, λ_total])
   log        u = a·log(b·λ + 1)
 
-All are monotone increasing, concave, Lipschitz and bounded on the domain.
+**The learnable surrogate** — a registry of parametric
+:class:`UtilityFamily` models (DESIGN.md §16.2) the controller may *fit*
+to its own observations and then differentiate, replacing the
+2W-perturbation gradient sweep with one analytic evaluation
+(``solver.step``'s ``grad_mode="learned"``).  Every registered family is
+monotone increasing and concave **by construction** (positivity via
+exp/softplus transforms, curvature via log1p/power/tanh — not by
+projection, so no fitted parameter setting can violate Assumptions 1–3):
+
+  log           u = exp(a)·log1p(softplus(b)·λ)
+  alpha-fair    u = exp(c)·((λ+ε)^{1−α} − ε^{1−α})/(1−α),  α=σ(r)∈(0,1)
+  softplus-mlp  u = Σ_h exp(w_h)/H · tanh(softplus(k_h)·λ)
+
+:func:`fit_utilities` is the regression step (jitted full-batch Adam on
+observed (Λ, U_task) pairs); :class:`OnlineFitter` wraps it with the
+serving plane's discipline — ring-buffered observations, a deterministic
+interleaved holdout, a relative-RMSE readiness threshold and refit
+cadence — so a live router can migrate from sampled to learned gradients
+only once the surrogate has earned it (DESIGN.md §16.4).
 """
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Callable
 
 import jax
@@ -73,3 +94,304 @@ def make_bank(kind: str, n_sessions: int, seed: int = 0,
         raise ValueError(kind)
     return UtilityBank(a=jnp.asarray(a, jnp.float32),
                        b=jnp.asarray(b, jnp.float32), kind=kind, noise=noise)
+
+
+# ---------------------------------------------------------------------------
+# parametric utility families (the learnable surrogates, DESIGN.md §16.2)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class UtilityFamily:
+    """One parametric family: a per-session scalar model u(p, λ).
+
+    ``_u`` maps ([P] raw params, scalar λ) → scalar utility and must be
+    monotone increasing + concave in λ for **every** raw parameter value
+    (constrained transforms, not clipping — ``tests/test_utility_registry``
+    property-checks this over random params).  Registry singletons compare
+    by identity (``eq=False``), so families are hashable jit-cache keys.
+    """
+
+    name: str
+    n_params: int                                   # P — raw params/session
+    _u: Callable[[Array, Array], Array]
+    _init: Callable[[np.random.Generator, int], np.ndarray]
+
+    def value(self, params: Array, lam: Array) -> Array:
+        """[W] per-session utilities from [W, P] raw params and [W] rates."""
+        return jax.vmap(self._u)(params, lam)
+
+    def total(self, params: Array, lam: Array) -> Array:
+        """Scalar Σ_w u_w(λ_w) — the learned stand-in for ``bank.total``."""
+        return self.value(params, lam).sum()
+
+    def grad(self, params: Array, lam: Array) -> Array:
+        """[W] analytic marginal utilities u'_w(λ_w) (what the learned
+        gradient mode feeds the mirror-ascent step instead of sampling)."""
+        return jax.vmap(jax.grad(self._u, argnums=1))(params, lam)
+
+    def init_params(self, n_sessions: int, seed: int = 0) -> Array:
+        """[W, P] raw parameters to start fitting from."""
+        rng = np.random.default_rng(seed)
+        p = np.asarray(self._init(rng, n_sessions), np.float32)
+        return jnp.asarray(p.reshape(n_sessions, self.n_params))
+
+
+def _u_log(p: Array, lam: Array) -> Array:
+    # amplitudes live on a log scale (exp) so fitting traverses decades in
+    # a few raw units; rates stay softplus — both transforms keep u
+    # increasing + concave for every raw value
+    a, b = jnp.exp(p[0]), jax.nn.softplus(p[1])
+    return a * jnp.log1p(b * lam)
+
+
+def _u_alpha_fair(p: Array, lam: Array) -> Array:
+    # α ∈ (0, 1): strictly concave, and the ε-shift keeps u(0) = 0 with a
+    # finite derivative at the origin (the box keeps λ ≥ δ anyway)
+    eps = 1e-3
+    c, alpha = jnp.exp(p[0]), jax.nn.sigmoid(p[1])
+    return c * ((lam + eps) ** (1.0 - alpha) - eps ** (1.0 - alpha)) \
+        / (1.0 - alpha)
+
+
+_MLP_H = 4
+
+
+def _u_softplus_mlp(p: Array, lam: Array) -> Array:
+    # positive combination of saturating concave ramps: each tanh(k·λ) is
+    # increasing + concave on λ ≥ 0, exp/softplus keep every weight ≥ 0
+    w = jnp.exp(p[:_MLP_H]) / _MLP_H
+    k = jax.nn.softplus(p[_MLP_H:])
+    return jnp.sum(w * jnp.tanh(k * lam))
+
+
+FAMILIES: dict[str, UtilityFamily] = {}
+
+
+def register_family(family: UtilityFamily) -> UtilityFamily:
+    """Add a family to the registry (open for extension, like costs).
+
+    Names are unique: re-registering an existing name raises — a silent
+    overwrite would swap the semantics under every ``Problem`` whose
+    ``util_family`` string already points at it.
+    """
+    if family.name in FAMILIES:
+        raise ValueError(f"utility family {family.name!r} is already "
+                         f"registered")
+    FAMILIES[family.name] = family
+    return family
+
+
+register_family(UtilityFamily(
+    name="log", n_params=2, _u=_u_log,
+    _init=lambda rng, W: np.stack(
+        [rng.uniform(0.0, 1.5, W), rng.uniform(-1.0, 0.0, W)], -1)))
+register_family(UtilityFamily(
+    name="alpha-fair", n_params=2, _u=_u_alpha_fair,
+    _init=lambda rng, W: np.stack(
+        [rng.uniform(0.0, 1.0, W), rng.normal(0.0, 0.5, W)], -1)))
+register_family(UtilityFamily(
+    name="softplus-mlp", n_params=2 * _MLP_H, _u=_u_softplus_mlp,
+    _init=lambda rng, W: np.concatenate(
+        [rng.uniform(0.0, 1.0, (W, _MLP_H)),
+         rng.uniform(-1.5, 0.0, (W, _MLP_H))], -1)))
+
+
+def get_family(name: str | UtilityFamily) -> UtilityFamily:
+    """A :class:`UtilityFamily` from its registry name (or pass through).
+
+    Unknown names raise a ``KeyError`` that lists what *is* registered —
+    same contract as ``costs.get`` / ``resolve_cost``: an "alpha_fair" vs
+    "alpha-fair" typo must not surface as a bare KeyError.
+    """
+    if isinstance(name, UtilityFamily):
+        return name
+    try:
+        return FAMILIES[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown utility family {name!r}: registered families are "
+            f"{sorted(FAMILIES)}") from None
+
+
+# ---------------------------------------------------------------------------
+# online regression: fit a family to observed (Λ, task-utility) pairs
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=None)
+def _fit_program(family: UtilityFamily, steps: int, lr: float):
+    """Jitted full-batch Adam on the family's total-utility MSE."""
+
+    def loss_fn(p, lams, us):
+        pred = jax.vmap(lambda l: family.total(p, l))(lams)
+        return jnp.mean((pred - us) ** 2)
+
+    def fit(p, lams, us):
+        b1, b2, eps = 0.9, 0.999, 1e-8
+        m0 = jnp.zeros_like(p)
+
+        def one(carry, i):
+            p, m, v = carry
+            g = jax.grad(loss_fn)(p, lams, us)
+            m = b1 * m + (1.0 - b1) * g
+            v = b2 * v + (1.0 - b2) * g * g
+            t = i + 1.0
+            mh = m / (1.0 - b1 ** t)
+            vh = v / (1.0 - b2 ** t)
+            # exponential decay to lr/100: the big early steps cross the
+            # raw-parameter scale gap (softplus⁻¹ of bank-sized a's), the
+            # late small ones polish to near-exact recovery
+            lr_t = lr * (0.01 ** (i / steps))
+            p = p - lr_t * mh / (jnp.sqrt(vh) + eps)
+            return (p, m, v), None
+
+        (p, _, _), _ = jax.lax.scan(one, (p, m0, m0),
+                                    jnp.arange(steps, dtype=p.dtype))
+        return p, loss_fn(p, lams, us)
+
+    return jax.jit(fit)
+
+
+def fit_utilities(family: str | UtilityFamily, params: Array, lams: Array,
+                  utils: Array, *, steps: int = 400,
+                  lr: float = 0.1) -> tuple[Array, Array]:
+    """One regression step: fit ``params`` to observed (Λ, U_task) pairs.
+
+    ``lams`` is [B, W] admitted allocations, ``utils`` [B] their measured
+    *task* utilities Σ_w u_w(λ_w) (network cost excluded — the controller
+    prices that itself).  Returns (fitted [W, P] params, final MSE).
+    Warm-starts from the passed ``params``, so repeated online calls
+    refine rather than restart; the compiled program is cached per
+    (family, steps, lr).
+    """
+    family = get_family(family)
+    params = jnp.asarray(params, jnp.float32)
+    lams = jnp.asarray(lams, jnp.float32)
+    utils = jnp.asarray(utils, jnp.float32).reshape(-1)
+    if lams.ndim != 2 or lams.shape[0] != utils.shape[0] \
+            or lams.shape[1] != params.shape[0]:
+        raise ValueError(
+            f"need lams [B, W={params.shape[0]}] and utils [B]; got "
+            f"{lams.shape} vs {utils.shape}")
+    return _fit_program(family, int(steps), float(lr))(params, lams, utils)
+
+
+class OnlineFitter:
+    """Accumulate live (Λ, û) pairs and decide when "learned" is earned.
+
+    The serving plane's fitting discipline (DESIGN.md §16.4): a ring
+    buffer of the most recent ``capacity`` observations, every
+    ``holdout_every``-th observation held out of the fit (deterministic
+    interleaving — no RNG in the control path), a refit every
+    ``refit_every`` new observations, and :attr:`ready` only once the
+    held-out relative RMSE clears ``threshold``.  :meth:`drifted` is the
+    fallback signal: an EMA of the live prediction error that tells a
+    router running learned gradients that the environment moved from
+    under its surrogate (bank swap, goodput shift) and it should drop
+    back to sampling until re-fit.
+    """
+
+    def __init__(self, family: str | UtilityFamily, n_sessions: int, *,
+                 capacity: int = 512, holdout_every: int = 4,
+                 threshold: float = 0.05, min_samples: int = 24,
+                 refit_every: int = 16, fit_steps: int = 400,
+                 lr: float = 0.1, drift_ema: float = 0.2,
+                 drift_threshold: float | None = None, seed: int = 0):
+        self.family = get_family(family)
+        self.n_sessions = int(n_sessions)
+        self.capacity = int(capacity)
+        self.holdout_every = int(holdout_every)
+        self.threshold = float(threshold)
+        self.min_samples = int(min_samples)
+        self.refit_every = int(refit_every)
+        self.fit_steps = int(fit_steps)
+        self.lr = float(lr)
+        self.drift_ema = float(drift_ema)
+        self.drift_threshold = float(
+            2.0 * threshold if drift_threshold is None else drift_threshold)
+        self.params = self.family.init_params(n_sessions, seed)
+        self._lams = np.zeros((self.capacity, self.n_sessions), np.float32)
+        self._utils = np.zeros(self.capacity, np.float32)
+        self.n_seen = 0                 # monotone — drives ring + holdout
+        self._since_fit = 0
+        self.n_fits = 0
+        self.holdout_error = float("inf")   # relative RMSE on held-out rows
+        self.drift = 0.0                    # EMA of live relative error
+
+    # -- data path -----------------------------------------------------------
+    def add(self, lams, utils) -> None:
+        """Record observations: ([W], scalar) or stacked ([B, W], [B])."""
+        lams = np.atleast_2d(np.asarray(lams, np.float32))
+        utils = np.asarray(utils, np.float32).reshape(-1)
+        if lams.shape != (utils.shape[0], self.n_sessions):
+            raise ValueError(
+                f"need lams [B, {self.n_sessions}] and utils [B]; got "
+                f"{lams.shape} vs {utils.shape}")
+        for row, u in zip(lams, utils):
+            slot = self.n_seen % self.capacity
+            self._lams[slot] = row
+            self._utils[slot] = u
+            self.n_seen += 1
+            self._since_fit += 1
+
+    def _split(self):
+        n = min(self.n_seen, self.capacity)
+        lams, utils = self._lams[:n], self._utils[:n]
+        # deterministic interleaved holdout on the *global* observation
+        # index, so a row keeps its role for as long as it lives in the ring
+        start = self.n_seen - n
+        idx = (np.arange(start, self.n_seen)) % self.holdout_every == 0
+        return (lams[~idx], utils[~idx]), (lams[idx], utils[idx])
+
+    # -- fitting -------------------------------------------------------------
+    def fit(self) -> float:
+        """Refit on the buffered train split; returns the holdout error."""
+        (tl, tu), (hl, hu) = self._split()
+        if len(tu) == 0:
+            return self.holdout_error
+        self.params, _ = fit_utilities(self.family, self.params, tl, tu,
+                                       steps=self.fit_steps, lr=self.lr)
+        self.n_fits += 1
+        self._since_fit = 0
+        if len(hu):
+            pred = np.asarray(jax.vmap(
+                lambda l: self.family.total(self.params, l))(
+                    jnp.asarray(hl)))
+            scale = max(float(np.abs(hu).mean()), 1e-6)
+            self.holdout_error = float(
+                np.sqrt(np.mean((pred - hu) ** 2)) / scale)
+        self.drift = 0.0        # fresh fit, fresh drift evidence
+        return self.holdout_error
+
+    def maybe_fit(self) -> bool:
+        """Refit if enough new data has arrived; returns True when it did."""
+        if self.n_seen < self.min_samples:
+            return False
+        if self.n_fits > 0 and self._since_fit < self.refit_every:
+            return False
+        self.fit()
+        return True
+
+    # -- readiness / fallback ------------------------------------------------
+    @property
+    def ready(self) -> bool:
+        """Held-out relative RMSE cleared the threshold — learned gradients
+        are admissible (``grad_mode="learned"`` may engage)."""
+        return self.holdout_error <= self.threshold
+
+    def predict(self, lam) -> float:
+        """Fitted Σ_w u_w(λ_w) at one [W] allocation."""
+        return float(self.family.total(self.params,
+                                       jnp.asarray(lam, jnp.float32)))
+
+    def observe_live(self, lam, util) -> None:
+        """Record a committed observation AND fold its prediction error
+        into the drift EMA (the learned-mode fallback signal)."""
+        err = abs(self.predict(lam) - float(util)) \
+            / max(abs(float(util)), 1e-6)
+        self.drift += self.drift_ema * (err - self.drift)
+        self.add(lam, util)
+
+    def drifted(self) -> bool:
+        """The environment moved from under the surrogate — fall back to
+        sampled gradients until the next successful refit."""
+        return self.drift > self.drift_threshold

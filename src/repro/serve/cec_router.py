@@ -62,6 +62,9 @@ from repro.core.routing import warm_start_phi
 from repro.core.scenario import (DemandShift, Event, ScenarioState,
                                  apply_event)
 from repro.core.solver import SolverConfig, SolverState, project_box_simplex
+from repro.core.utility import OnlineFitter
+
+GRAD_POLICIES = ("sampled", "learned", "auto")
 
 
 def _call_utility(utility_fn, lams: np.ndarray) -> np.ndarray:
@@ -93,6 +96,28 @@ class CECRouter:
     ``solver.serving_defaults()`` — single-loop OMAD with the hot
     η_inner=3.0 oracle (see that preset's docstring for why serving
     diverges from ``paper_defaults()``).
+
+    ``grad_policy`` picks how the outer gradient is obtained
+    (DESIGN.md §16.4):
+
+    * ``"sampled"`` (default) — every interval admits the 2W perturbed
+      allocations and two-point-estimates the gradient from measured
+      utilities.  Exactly the pre-§16 router.
+    * ``"learned"`` — the measured (Λ, û) pairs feed an
+      :class:`~repro.core.utility.OnlineFitter`; once the held-out error
+      clears its threshold the router *migrates live* to
+      ``grad_mode="learned"`` — one committed measurement per interval
+      and an analytic gradient of the fitted surrogate through the
+      implicit routing layer.  Pinned: once earned it stays learned
+      (drift is tracked but does not demote).
+    * ``"auto"`` — like ``"learned"``, but :meth:`OnlineFitter.drifted`
+      demotes the router back to sampling until a refit re-clears the
+      threshold — the safe default for non-stationary environments
+      (bank swaps, goodput shifts).
+
+    The per-interval record gains ``mode`` (which gradient ran) and
+    ``oracle_calls`` (measured admissions this interval: 2W+1 sampled,
+    1 learned — the quantity ``benchmarks/bench_learned.py`` tracks).
     """
 
     graph: CECGraph | CECGraphSparse
@@ -103,8 +128,13 @@ class CECRouter:
     inner_iters: int = 1
     cost_name: str = "exp"
     config: SolverConfig | None = None
+    grad_policy: str = "sampled"
+    util_family: str | None = None
 
     def __post_init__(self):
+        if self.grad_policy not in GRAD_POLICIES:
+            raise ValueError(f"grad_policy must be one of {GRAD_POLICIES}; "
+                             f"got {self.grad_policy!r}")
         if self.config is None:
             # the legacy knobs, expressed as a config: K=1 is OMAD
             method = "single" if self.inner_iters == 1 else "nested"
@@ -129,6 +159,23 @@ class CECRouter:
         self.graph = self.problem.graph
         self.state: SolverState = _solver.init(self.problem, self.config)
         self.history: list[dict] = []
+        self.fitter: OnlineFitter | None = None
+        self._migrated = False
+        if self.grad_policy != "sampled":
+            if self.util_family is None:
+                self.util_family = "log"
+            self.fitter = OnlineFitter(self.util_family,
+                                       self.graph.n_sessions)
+
+    def _grad_mode_now(self) -> str:
+        """Which gradient this interval runs (the migration decision)."""
+        if self.grad_policy == "learned" and self._migrated:
+            return "learned"      # pinned: the switch is one-way
+        if self.fitter is None or not self.fitter.ready:
+            return "sampled"
+        if self.grad_policy == "auto" and self.fitter.drifted():
+            return "sampled"
+        return "learned"
 
     # -- the solver state, exposed under its historical names ---------------
     @property
@@ -146,25 +193,48 @@ class CECRouter:
 
         ``utility_fn`` reports the *measured* task utility for admitted
         allocations (the engine serves the split and reports
-        quality-weighted goodput): called once with the [2W, W] stack of
-        perturbed admissions and once with the committed allocation (see
-        :func:`_call_utility` for the batched/scalar contract).  Everything
-        else — oracle invocations, gradient estimate, mirror ascent, exact
-        projection, committed observation — is a single jitted
-        ``solver.fused_step`` call; the ``SolverState`` never leaves the
-        device.
+        quality-weighted goodput).  In sampled mode it is called once
+        with the [2W, W] stack of perturbed admissions and once with the
+        committed allocation (see :func:`_call_utility` for the
+        batched/scalar contract); in learned mode (``grad_policy`` with
+        a :attr:`fitter` that is :attr:`~repro.core.utility.OnlineFitter.
+        ready`) only the committed call happens — the gradient is
+        analytic through the fitted surrogate and the implicit routing
+        layer (DESIGN.md §16.4).  Everything else — oracle invocations,
+        gradient, mirror ascent, exact projection, committed observation
+        — is a single jitted ``solver.fused_step`` call; the
+        ``SolverState`` never leaves the device.
         """
-        pert = _solver.perturbed_allocations(self.state.lam,
-                                             self.config.delta)
-        task_u = jnp.asarray(_call_utility(utility_fn, np.asarray(pert)))
-        self.state, info = _solver.fused_step(self.config)(
-            self.problem, self.state, task_u)
+        mode = self._grad_mode_now()
+        W = self.graph.n_sessions
+        if mode == "learned":
+            self._migrated = True
+            prob = self.problem.with_utilities(self.util_family,
+                                               self.fitter.params)
+            cfg = self.config.replace(grad_mode="learned")
+            self.state, info = _solver.fused_step(cfg)(
+                prob, self.state, jnp.zeros((2 * W,), jnp.float32))
+            oracle_calls = 1
+        else:
+            pert = _solver.perturbed_allocations(self.state.lam,
+                                                 self.config.delta)
+            task_u = jnp.asarray(_call_utility(utility_fn, np.asarray(pert)))
+            self.state, info = _solver.fused_step(self.config)(
+                self.problem, self.state, task_u)
+            if self.fitter is not None:
+                self.fitter.add(np.asarray(pert), np.asarray(task_u))
+            oracle_calls = 2 * W + 1
         u_task = float(
             _call_utility(utility_fn, np.asarray(self.state.lam)[None])[0])
+        if self.fitter is not None:
+            self.fitter.observe_live(np.asarray(self.state.lam), u_task)
+            self.fitter.maybe_fit()
         rec = {"lam": np.asarray(self.state.lam).copy(),
                "cost": float(info.cost),
                "utility": u_task - float(info.cost),
-               "grad": np.asarray(info.grad).copy()}
+               "grad": np.asarray(info.grad).copy(),
+               "mode": mode,
+               "oracle_calls": oracle_calls}
         self.history.append(rec)
         return rec
 

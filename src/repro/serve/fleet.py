@@ -57,8 +57,9 @@ from repro.core.routing import warm_start_phi
 from repro.core.scenario import (DemandShift, Event, ScenarioState,
                                  apply_event)
 from repro.core.solver import SolverConfig, SolverState, project_box_simplex
+from repro.core.utility import OnlineFitter
 
-from .cec_router import _call_utility
+from .cec_router import GRAD_POLICIES, _call_utility
 
 __all__ = ["FleetView", "RouterFleet"]
 
@@ -130,7 +131,12 @@ class RouterFleet:
     def __init__(self, graphs: Sequence[CECGraph], lam_totals,
                  *, cost_name: str = "exp",
                  config: SolverConfig | None = None, donate: bool = True,
-                 n_phys: int | None = None, depth_max: int | None = None):
+                 n_phys: int | None = None, depth_max: int | None = None,
+                 grad_policy: str = "sampled",
+                 util_family: str | None = None):
+        if grad_policy not in GRAD_POLICIES:
+            raise ValueError(f"grad_policy must be one of {GRAD_POLICIES}; "
+                             f"got {grad_policy!r}")
         graphs = list(graphs)
         if any(isinstance(g, CECGraphSparse) for g in graphs):
             raise NotImplementedError(
@@ -165,7 +171,33 @@ class RouterFleet:
             phi=self.batch.uniform_phi(),
             t=jnp.zeros((K,), jnp.int32))
         self.history: list[dict] = []
+        # live sampled→learned migration (DESIGN.md §16.4): one fitter per
+        # tenant; the switch is all-or-nothing because the fleet step is one
+        # jitted call with a single static grad_mode — a half-migrated fleet
+        # would split the batch.
+        self.grad_policy = grad_policy
+        self.util_family = util_family
+        self._migrated = False
+        self.fitters: list[OnlineFitter] | None = None
+        if grad_policy != "sampled":
+            if self.util_family is None:
+                self.util_family = "log"
+            self.fitters = [OnlineFitter(self.util_family, W, seed=k)
+                            for k in range(K)]
         self._publish()
+
+    def _grad_mode_now(self) -> str:
+        """Which gradient this interval runs — learned only once *every*
+        tenant's fitter is ready (and, under ``"auto"``, none drifted).
+        ``"learned"`` is the pinned variant: the switch is one-way."""
+        if self.grad_policy == "learned" and self._migrated:
+            return "learned"
+        if self.fitters is None or not all(f.ready for f in self.fitters):
+            return "sampled"
+        if self.grad_policy == "auto" \
+                and any(f.drifted() for f in self.fitters):
+            return "sampled"
+        return "learned"
 
     # -- fleet shape --------------------------------------------------------
     @property
@@ -224,25 +256,58 @@ class RouterFleet:
         Returns a record of [K]-shaped arrays (per-tenant cost, measured
         task utility at the committed Λ, net utility), appended to
         ``history`` — the ``CECRouter.control_step`` record, vectorized.
+
+        Under a non-sampled ``grad_policy`` the sweep's measurements feed
+        the per-tenant fitters, and once **every** fitter is ready the
+        fleet migrates live to learned gradients — one committed
+        measurement per tenant per interval, stacked [K, W, P] surrogate
+        params threaded through ``fused_step_batch`` as a data leaf
+        (refits never retrace; DESIGN.md §16.4).
         """
-        delta = self.config.delta
-        pert = jax.vmap(
-            lambda l: _solver.perturbed_allocations(l, delta))(self._view.lam)
-        task_u = self._measure(utility_fn, np.asarray(pert))
-        step = fused_step_batch(self.config, cost=self.cost_name,
-                                donate=self.donate)
-        self.state, info = step(
-            self.batch.stacked_graph(),
-            jnp.asarray(self.lam_totals),
-            self.state, jnp.asarray(task_u))
+        mode = self._grad_mode_now()
+        K, W = self.n_tenants, self.n_sessions
+        if mode == "learned":
+            self._migrated = True
+            params = jnp.stack([f.params for f in self.fitters])
+            step = fused_step_batch(
+                self.config.replace(grad_mode="learned"),
+                cost=self.cost_name, donate=self.donate,
+                util_family=self.util_family)
+            self.state, info = step(
+                self.batch.stacked_graph(), jnp.asarray(self.lam_totals),
+                self.state, jnp.zeros((K, 2 * W), jnp.float32), params)
+            oracle_calls = 1
+        else:
+            delta = self.config.delta
+            pert = jax.vmap(lambda l: _solver.perturbed_allocations(
+                l, delta))(self._view.lam)
+            pert = np.asarray(pert)
+            task_u = self._measure(utility_fn, pert)
+            step = fused_step_batch(self.config, cost=self.cost_name,
+                                    donate=self.donate)
+            self.state, info = step(
+                self.batch.stacked_graph(),
+                jnp.asarray(self.lam_totals),
+                self.state, jnp.asarray(task_u))
+            if self.fitters is not None:
+                for k, f in enumerate(self.fitters):
+                    f.add(pert[k], task_u[k])
+            oracle_calls = 2 * W + 1
         self._publish()
         u_task = self._measure(
             utility_fn, np.asarray(self._view.lam)[:, None, :])[:, 0]
+        if self.fitters is not None:
+            lam = np.asarray(self._view.lam)
+            for k, f in enumerate(self.fitters):
+                f.observe_live(lam[k], float(u_task[k]))
+                f.maybe_fit()
         cost = np.asarray(info.cost, np.float32)
         rec = {"lam": np.asarray(self._view.lam).copy(),
                "cost": cost,
                "utility": u_task - cost,
-               "grad": np.asarray(info.grad).copy()}
+               "grad": np.asarray(info.grad).copy(),
+               "mode": mode,
+               "oracle_calls": oracle_calls}
         self.history.append(rec)
         return rec
 

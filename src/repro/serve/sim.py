@@ -84,6 +84,8 @@ class ServingSim:
     eta_outer: float = 0.05
     eta_inner: float = 3.0
     config: SolverConfig | None = None     # overrides the three knobs above
+    grad_policy: str = "sampled"           # sampled | learned | auto (§16.4)
+    util_family: str | None = None         # surrogate family for the fitter
 
     def __post_init__(self):
         self.state: ScenarioState = initial_state(self.scenario, self.seed)
@@ -92,7 +94,9 @@ class ServingSim:
         self.router = CECRouter(self.state.graph(),
                                 lam_total=self.state.lam_total,
                                 delta=self.delta, eta_outer=self.eta_outer,
-                                eta_inner=self.eta_inner, config=self.config)
+                                eta_inner=self.eta_inner, config=self.config,
+                                grad_policy=self.grad_policy,
+                                util_family=self.util_family)
         self.config = self.router.config
         self.n_versions = self.state.deploy.shape[0]
         if self.quality is None:

@@ -1,0 +1,88 @@
+"""Hypergradient step-size tuning (DESIGN.md §16.3).
+
+``tune_etas`` must *improve* deliberately detuned (η_outer, η_inner) by
+ascending the rollout-tail utility through the implicit layer, return a
+drop-in ``SolverConfig``, and refuse the Pallas kernel path (where η is
+baked static).  These tests pin behaviour, not specific tuned values —
+the meta-objective is nonconvex and the gradient is truncated (module
+docstring of ``core/hypergrad.py``), so the contract is "better than the
+detuned start", not "finds the global optimum".
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (build_random_cec, make_bank, paper_defaults,
+                        serving_defaults, tune_etas)
+from repro.core import dispatch, solver as _solver
+from repro.core.hypergrad import rollout_objective
+from repro.core.problem import Problem
+from repro.topo import connected_er
+
+
+@pytest.fixture(scope="module")
+def problem():
+    g = build_random_cec(connected_er(12, 0.35, seed=3), 3, 10.0, seed=0)
+    bank = make_bank("log", g.n_sessions, seed=0)
+    return Problem.create(g, bank, lam_total=15.0)
+
+
+def test_tune_improves_detuned_steps(problem):
+    detuned = paper_defaults().replace(eta_outer=0.002, eta_inner=0.05,
+                                       inner_iters=5)
+    res = tune_etas(problem, detuned, meta_iters=8, rollout_iters=8, tail=3)
+    assert res.objective.shape == (9,)
+    assert res.etas.shape == (9, 2)
+    # the returned pair is the argmax of what was actually measured...
+    best = int(np.argmax(res.objective))
+    np.testing.assert_allclose(res.etas[best],
+                               [res.eta_outer, res.eta_inner], rtol=1e-6)
+    # ...and beats the detuned start by a real margin
+    assert res.objective[best] > res.objective[0] + 0.1, res.objective
+    assert res.eta_outer > detuned.eta_outer
+    # the result is a drop-in config
+    assert res.config.eta_outer == res.eta_outer
+    out = _solver.run(problem, res.config, iters=10)
+    assert bool(jnp.isfinite(out.utility_traj).all())
+
+
+def test_rollout_objective_requires_bank(problem):
+    import dataclasses
+
+    bankless = dataclasses.replace(problem, bank=None)
+    cfg = serving_defaults()
+    state0 = _solver.init(bankless, cfg)
+    with pytest.raises(ValueError, match="bank"):
+        rollout_objective(bankless, cfg, state0,
+                          jnp.zeros(2), iters=4, tail=2)
+
+
+def test_step_with_etas_refuses_kernel_dispatch(problem):
+    cfg = serving_defaults()
+    state = _solver.init(problem, cfg)
+    task_u = jnp.zeros((2 * problem.graph.n_sessions,), jnp.float32)
+    with dispatch.kernel_dispatch(1):   # force kernels at any size
+        with pytest.raises(NotImplementedError, match="kernel"):
+            _solver.step_with_etas(problem, cfg, state, task_u,
+                                   jnp.float32(0.05), jnp.float32(3.0))
+
+
+def test_step_with_etas_matches_step_at_config_etas(problem):
+    """With η's equal to the config's, the traced-η step is the plain
+    sampled step — same committed state, same info."""
+    cfg = serving_defaults()
+    state = _solver.init(problem, cfg)
+    W = problem.graph.n_sessions
+    bank = problem.bank
+    import jax
+
+    task_u = jax.vmap(bank.total)(
+        _solver.perturbed_allocations(state.lam, cfg.delta))
+    s_ref, i_ref = _solver.step(problem, cfg, state, task_u)
+    s_eta, i_eta = _solver.step_with_etas(
+        problem, cfg, state, task_u,
+        jnp.float32(cfg.eta_outer), jnp.float32(cfg.eta_inner))
+    np.testing.assert_allclose(np.asarray(s_ref.lam), np.asarray(s_eta.lam),
+                               rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(float(i_ref.cost), float(i_eta.cost),
+                               rtol=1e-6)

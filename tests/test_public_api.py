@@ -94,18 +94,21 @@ PINNED_ALL = [
     "CECGraph", "CECGraphSparse", "CECGraphBatch", "UtilityBank",
     "build_random_cec", "build_augmented", "build_augmented_sparse",
     "make_bank", "get_cost", "resolve_cost",
+    "UtilityFamily", "get_family", "fit_utilities", "OnlineFitter",
+    "fixed_point_solve", "tune_etas",
     "CECRouter", "InferenceEngine", "ServingSim",
     "core", "configs", "topo", "kernels", "serve", "parallel",
     "models", "train", "optim", "data", "launch", "roofline",
 ]
 
 PINNED_SOLVER_CONFIG_FIELDS = (
-    "method", "delta", "eta_outer", "eta_inner", "inner_iters")
+    "method", "delta", "eta_outer", "eta_inner", "inner_iters", "grad_mode")
 PINNED_SOLVER_STATE_FIELDS = ("lam", "phi", "t")
 PINNED_RESULT_FIELDS = ("lam", "phi", "utility_traj", "lam_traj",
                         "cost_traj", "grad_traj", "state")
 PINNED_ROUTER_FIELDS = ("graph", "lam_total", "delta", "eta_outer",
-                        "eta_inner", "inner_iters", "cost_name", "config")
+                        "eta_inner", "inner_iters", "cost_name", "config",
+                        "grad_policy", "util_family")
 
 
 def test_repro_all_is_pinned():

@@ -272,3 +272,75 @@ def test_serving_sim_end_to_end():
     # admission split stays feasible through the event
     np.testing.assert_allclose(rep.lam.sum(-1), 12.0, rtol=1e-4)
     assert (rep.goodput > 0).all()
+
+
+def test_router_migrates_to_learned_and_drift_demotes():
+    """grad_policy="auto": the router samples until the fitter's holdout
+    clears, migrates to learned gradients (1 measured admission per
+    interval instead of 2W+1), and demotes itself when the measured
+    environment moves from under the surrogate (DESIGN.md §16.4)."""
+    from repro.core import make_bank
+
+    g = build_random_cec(connected_er(10, 0.35, seed=2), 3, 20.0, seed=0)
+    W = g.n_sessions
+    bank = make_bank("log", W, seed=0)
+    scale = [1.0]
+
+    def util(lams):
+        lams = np.atleast_2d(np.asarray(lams))
+        return scale[0] * np.asarray(
+            jax.vmap(bank.total)(jnp.asarray(lams)))
+
+    router = CECRouter(g, lam_total=12.0, grad_policy="auto",
+                       util_family="log")
+    router.fitter.min_samples, router.fitter.refit_every = 20, 8
+    router.fitter.fit_steps = 800
+    for _ in range(12):
+        rec = router.control_step(util)
+    assert rec["mode"] == "learned"
+    assert rec["oracle_calls"] == 1
+    modes = [h["mode"] for h in router.history if "mode" in h]
+    assert modes[0] == "sampled"
+    assert {h["oracle_calls"] for h in router.history
+            if h.get("mode") == "sampled"} == {2 * W + 1}
+    # the environment moves hard: measured utilities scale 2.5× — the
+    # drift EMA crosses its threshold and the router falls back
+    scale[0] = 2.5
+    demoted = False
+    for _ in range(6):
+        rec = router.control_step(util)
+        demoted = demoted or rec["mode"] == "sampled"
+    assert demoted
+
+
+def test_router_learned_pinned_policy_stays_learned():
+    """grad_policy="learned" is the pinned variant: drift is tracked but
+    never demotes."""
+    from repro.core import make_bank
+
+    g = build_random_cec(connected_er(10, 0.35, seed=2), 3, 20.0, seed=0)
+    bank = make_bank("log", g.n_sessions, seed=0)
+    scale = [1.0]
+
+    def util(lams):
+        lams = np.atleast_2d(np.asarray(lams))
+        return scale[0] * np.asarray(
+            jax.vmap(bank.total)(jnp.asarray(lams)))
+
+    router = CECRouter(g, lam_total=12.0, grad_policy="learned",
+                       util_family="log")
+    router.fitter.min_samples, router.fitter.refit_every = 20, 8
+    router.fitter.fit_steps = 800
+    for _ in range(10):
+        rec = router.control_step(util)
+    assert rec["mode"] == "learned"
+    scale[0] = 2.5
+    for _ in range(4):
+        rec = router.control_step(util)
+        assert rec["mode"] == "learned"
+
+
+def test_router_rejects_unknown_grad_policy():
+    g = build_random_cec(connected_er(10, 0.35, seed=2), 3, 20.0, seed=0)
+    with pytest.raises(ValueError, match="grad_policy"):
+        CECRouter(g, lam_total=12.0, grad_policy="leraned")

@@ -34,7 +34,7 @@ MODULES = ("fig7_routing_convergence", "fig8_9_network_size",
            "table2_topologies", "bench_kernels", "bench_batched",
            "bench_scenarios", "bench_router", "bench_sparse",
            "bench_fleet", "bench_serving", "bench_learned",
-           "perf_iterations")
+           "bench_megakernel", "perf_iterations")
 
 TRAJECTORY_DIR = pathlib.Path("benchmarks/trajectory")
 TRAJECTORY_SCHEMA = 2

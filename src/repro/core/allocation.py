@@ -54,6 +54,9 @@ class ControlStep(NamedTuple):
     phi: Array          # [W, Nb, Nb] routing after the committed observation
     grad: Array         # [W] two-point gradient estimate ĝ^t
     cost: Array         # scalar network cost D(Λ^{t+1}, φ^{t+1})
+    t: Array            # scalar int32 — the *advanced* counter t+1; thread
+    #                     it into the next call so t-dependent schedules
+    #                     see real time instead of a frozen t=0
 
 
 def control_step(
@@ -68,20 +71,25 @@ def control_step(
     eta_outer: float = 0.05,
     eta_inner: float = 0.05,
     inner_iters: int = 1,
+    t=0,
 ) -> ControlStep:
     """One fused outer iteration on explicit iterates (``solver.step``).
 
     Kept for callers that hold raw (Λ, φ) instead of a ``SolverState``;
-    see :func:`repro.core.solver.step` for the semantics.
+    see :func:`repro.core.solver.step` for the semantics.  ``t`` is the
+    outer-iteration counter: pass the previous call's ``ControlStep.t``
+    (it defaults to 0 for the first call) so a legacy loop advances the
+    counter exactly like ``solver.run``'s scan — earlier revisions reset
+    it to 0 every call, silently freezing every t-dependent schedule.
     """
     config = SolverConfig.from_legacy(delta=delta, eta_outer=eta_outer,
                                       eta_inner=eta_inner,
                                       inner_iters=inner_iters)
     problem = Problem(graph=graph, bank=None, lam_total=lam_total, cost=cost)
-    state = SolverState(lam=lam, phi=phi, t=jnp.int32(0))
+    state = SolverState(lam=lam, phi=phi, t=jnp.asarray(t, jnp.int32))
     state, info = _solver.step(problem, config, state, task_utilities)
     return ControlStep(lam=state.lam, phi=state.phi, grad=info.grad,
-                       cost=info.cost)
+                       cost=info.cost, t=state.t)
 
 
 @functools.lru_cache(maxsize=None)
@@ -89,13 +97,13 @@ def _fused_control_step(cost_name: str, config: SolverConfig, _dispatch_key):
     cost = resolve_cost(cost_name)
     fused = _solver.fused_step(config)
 
-    def fn(graph, lam, phi, task_utilities, lam_total):
+    def fn(graph, lam, phi, task_utilities, lam_total, t=0):
         problem = Problem(graph=graph, bank=None, lam_total=lam_total,
                           cost=cost)
-        state = SolverState(lam=lam, phi=phi, t=jnp.int32(0))
+        state = SolverState(lam=lam, phi=phi, t=jnp.asarray(t, jnp.int32))
         state, info = fused(problem, state, task_utilities)
         return ControlStep(lam=state.lam, phi=state.phi, grad=info.grad,
-                           cost=info.cost)
+                           cost=info.cost, t=state.t)
 
     return fn
 
@@ -106,11 +114,13 @@ def fused_control_step(cost_name: str, *, delta: float = 0.5,
     """The jitted fused control step, cached on its static knobs.
 
     Legacy facade over :func:`repro.core.solver.fused_step` — returns
-    ``fn(graph, lam, phi, task_utilities, lam_total) -> ControlStep``.
+    ``fn(graph, lam, phi, task_utilities, lam_total, t=0) -> ControlStep``.
     ``graph`` is a pytree argument, so same-shape topology changes reuse
     the compiled executable, and ``lam_total`` is traced so demand shifts
     never retrace; the cache is keyed on ``dispatch.state_key()``
-    (DESIGN.md §11).
+    (DESIGN.md §11).  Thread each call's ``ControlStep.t`` back in as
+    ``t`` — the counter is a traced int32 leaf, so advancing it never
+    retraces (and a python-int 0 first call compiles the same program).
     """
     config = SolverConfig.from_legacy(delta=delta, eta_outer=eta_outer,
                                       eta_inner=eta_inner,

@@ -20,6 +20,13 @@ orders of magnitude slower than the fused einsums — correct for validating
 the kernel path everywhere (tests and benchmarks opt in via
 ``kernel_dispatch``), wrong as a silent default for a large graph on CPU.
 
+Environment knobs are **re-read on every policy query** (they used to be
+bound once at import, which made late ``os.environ`` mutation a silent
+no-op — DESIGN.md §17.4).  Programmatic overrides (setters / context
+managers) take precedence over the environment while active; clearing an
+override (``set_kernel_threshold(None)``, context exit) falls back to the
+live environment, not to a stale import-time snapshot.
+
 The dispatch decision is made at **trace time** against the *static*
 ``CECGraph.n_bar`` metadata, so both branches stay jit/vmap compatible and
 no control flow enters the compiled program.  The flip side: a function
@@ -27,6 +34,9 @@ that was already jit-compiled keeps the branch it was traced with —
 ``kernel_dispatch`` / ``set_kernel_threshold`` only affect functions traced
 while the override is active, and are silent no-ops for cached traces.
 Trace (or re-jit) inside the override when you need the kernel path.
+Every lru-cached jitted entry point keys on :func:`state_key`, which also
+re-reads the environment — so a late env mutation *does* reach cached
+consumers (a fresh key forces a fresh trace).
 
 A second, orthogonal axis is the **representation** (DESIGN.md §12): past
 :func:`use_sparse`'s (N, density) policy, :func:`maybe_sparsify` converts
@@ -36,6 +46,14 @@ core/problem.py — every entry point routes through it) and at the raw
 routing oracle ``solve_routing``.  Conversion is Python-level only — tracer inputs pass
 through untouched — and :func:`state_key` covers both axes so cached
 jitted control steps retrace under either override.
+
+A third axis is the **fused control megakernel** (DESIGN.md §17): past
+:func:`use_megakernel`'s policy, ``solver.step`` replaces the whole
+``lax.scan``-of-observations control iteration with the single Pallas
+kernel in ``kernels/control_megakernel.py``.  Its extra condition is the
+VMEM residency contract — the per-session routing variables (W·n̄² plus
+the flow/marginal scratch) must fit the per-core VMEM budget, checked by
+:func:`megakernel_fits` at trace time.
 """
 from __future__ import annotations
 
@@ -45,31 +63,43 @@ import os
 import jax
 import numpy as np
 
-DEFAULT_THRESHOLD = int(os.environ.get("REPRO_KERNEL_NBAR_THRESHOLD", "256"))
+# Defaults when the env knob is absent and no override is active.
+DEFAULT_THRESHOLD = 256
+SPARSE_DEFAULT_THRESHOLD = 512
+SPARSE_DEFAULT_DENSITY = 0.15
+MEGAKERNEL_DEFAULT_THRESHOLD = 256
 
-_threshold = DEFAULT_THRESHOLD
-# Explicit configuration (env var / setter / context manager) opts in to the
-# interpret-mode kernel path off-TPU; by default kernels need real TPUs.
-_explicit = "REPRO_KERNEL_NBAR_THRESHOLD" in os.environ
+# Programmatic overrides (setter / context manager).  ``None`` means "no
+# override: follow the live environment".  The env vars themselves are
+# re-read at query time — never cached at import.
+_threshold: int | None = None
+_explicit: bool | None = None
+_sparse_threshold: int | None = None
+_sparse_density: float | None = None
+_mega_threshold: int | None = None
+_mega_explicit: bool | None = None
 
-# Dense-vs-sparse representation policy (DESIGN.md §12.2): a graph whose
-# augmented node count clears REPRO_SPARSE_NBAR_THRESHOLD *and* whose union
-# edge density is at most REPRO_SPARSE_DENSITY_MAX is converted to the
-# edge-list representation by :func:`maybe_sparsify`.  Unlike the kernel
-# threshold there is no backend condition — the sparse jnp path beats the
-# dense einsums on every backend once the graph is big and sparse enough.
-SPARSE_DEFAULT_THRESHOLD = int(
-    os.environ.get("REPRO_SPARSE_NBAR_THRESHOLD", "512"))
-SPARSE_DEFAULT_DENSITY = float(
-    os.environ.get("REPRO_SPARSE_DENSITY_MAX", "0.15"))
 
-_sparse_threshold = SPARSE_DEFAULT_THRESHOLD
-_sparse_density = SPARSE_DEFAULT_DENSITY
+def _env_int(name: str, default: int) -> int:
+    return int(os.environ.get(name, default))
+
+
+def _env_float(name: str, default: float) -> float:
+    return float(os.environ.get(name, default))
 
 
 def kernel_threshold() -> int:
     """Augmented node count n̄ at which the Pallas path takes over."""
-    return _threshold
+    if _threshold is not None:
+        return _threshold
+    return _env_int("REPRO_KERNEL_NBAR_THRESHOLD", DEFAULT_THRESHOLD)
+
+
+def _kernel_explicit() -> bool:
+    """Whether the kernel threshold was explicitly configured (env/setter)."""
+    if _explicit is not None:
+        return _explicit
+    return "REPRO_KERNEL_NBAR_THRESHOLD" in os.environ
 
 
 def set_kernel_threshold(n: int | None) -> None:
@@ -77,12 +107,12 @@ def set_kernel_threshold(n: int | None) -> None:
 
     An explicit threshold also enables the kernel path off-TPU (interpret
     mode).  Only affects functions traced after the call (see module
-    docstring).
+    docstring).  ``None`` falls back to the *live* environment — it does
+    not pin an import-time snapshot.
     """
     global _threshold, _explicit
     if n is None:
-        _threshold = DEFAULT_THRESHOLD
-        _explicit = "REPRO_KERNEL_NBAR_THRESHOLD" in os.environ
+        _threshold = _explicit = None
     else:
         _threshold = int(n)
         _explicit = True
@@ -108,20 +138,23 @@ def kernel_dispatch(threshold: int):
 
 def sparse_threshold() -> int:
     """Augmented node count n̄ at which sparsification is considered."""
-    return _sparse_threshold
+    if _sparse_threshold is not None:
+        return _sparse_threshold
+    return _env_int("REPRO_SPARSE_NBAR_THRESHOLD", SPARSE_DEFAULT_THRESHOLD)
 
 
 def sparse_density_max() -> float:
     """Union edge density |Ē|/n̄² at or below which sparsification engages."""
-    return _sparse_density
+    if _sparse_density is not None:
+        return _sparse_density
+    return _env_float("REPRO_SPARSE_DENSITY_MAX", SPARSE_DEFAULT_DENSITY)
 
 
 def set_sparse_threshold(n: int | None, density_max: float | None = None):
     """Set the sparse-representation policy; ``None`` n restores defaults."""
     global _sparse_threshold, _sparse_density
     if n is None:
-        _sparse_threshold = SPARSE_DEFAULT_THRESHOLD
-        _sparse_density = SPARSE_DEFAULT_DENSITY
+        _sparse_threshold = _sparse_density = None
     else:
         _sparse_threshold = int(n)
         if density_max is not None:
@@ -149,7 +182,7 @@ def sparse_dispatch(threshold: int, density_max: float = 1.0):
 
 def use_sparse(n_bar: int, density: float) -> bool:
     """True when a graph of ``n_bar`` nodes / ``density`` should go sparse."""
-    return n_bar >= _sparse_threshold and density <= _sparse_density
+    return n_bar >= sparse_threshold() and density <= sparse_density_max()
 
 
 def maybe_sparsify(graph, *companions):
@@ -166,7 +199,7 @@ def maybe_sparsify(graph, *companions):
 
     if not isinstance(graph, CECGraph):
         return graph
-    if graph.n_bar < _sparse_threshold:      # cheap static reject first —
+    if graph.n_bar < sparse_threshold():     # cheap static reject first —
         return graph                         # no device→host mask transfer
     if any(isinstance(x, jax.core.Tracer)
            for x in (graph.edge_mask, *companions) if x is not None):
@@ -175,6 +208,112 @@ def maybe_sparsify(graph, *companions):
     if not use_sparse(graph.n_bar, density):
         return graph
     return sparsify(graph)
+
+
+# --------------------------------------------------------------------------
+# megakernel axis (DESIGN.md §17): whether ``solver.step`` should run the
+# whole control iteration (perturbation sweep + oracle + mirror ascent +
+# projection) as the single fused Pallas kernel instead of the stitched
+# lax.scan over per-phase kernels.
+# --------------------------------------------------------------------------
+
+# Per-core VMEM the fused kernel may claim for its resident state.  Real
+# v5e cores have 128 MiB; we budget well under half of it so the compiler
+# retains room for pipeline buffers and spills, and so the policy stays
+# conservative in interpret mode (where the "budget" is only a model).
+MEGAKERNEL_VMEM_BUDGET = 48 * 1024 * 1024
+
+
+def megakernel_threshold() -> int:
+    """Augmented node count n̄ at which the fused control step engages."""
+    if _mega_threshold is not None:
+        return _mega_threshold
+    return _env_int("REPRO_MEGAKERNEL_NBAR_THRESHOLD",
+                    MEGAKERNEL_DEFAULT_THRESHOLD)
+
+
+def _megakernel_explicit() -> bool:
+    if _mega_explicit is not None:
+        return _mega_explicit
+    return "REPRO_MEGAKERNEL_NBAR_THRESHOLD" in os.environ
+
+
+def set_megakernel_threshold(n: int | None) -> None:
+    """Set the megakernel threshold; ``None`` restores env-following."""
+    global _mega_threshold, _mega_explicit
+    if n is None:
+        _mega_threshold = _mega_explicit = None
+    else:
+        _mega_threshold = int(n)
+        _mega_explicit = True
+
+
+@contextlib.contextmanager
+def megakernel_dispatch(threshold: int):
+    """Temporarily force the fused control step (tests/benchmarks).
+
+    ``with megakernel_dispatch(1): ...`` sends every ``solver.step``
+    traced inside the block through ``kernels.control_megakernel``
+    regardless of graph size or backend (interpret mode off-TPU), VMEM
+    fit permitting.  Same trace-time caveat as :func:`kernel_dispatch`.
+    """
+    global _mega_threshold, _mega_explicit
+    prev = (_mega_threshold, _mega_explicit)
+    _mega_threshold, _mega_explicit = int(threshold), True
+    try:
+        yield
+    finally:
+        _mega_threshold, _mega_explicit = prev
+
+
+def megakernel_phi_dtype() -> str:
+    """Storage dtype for the kernel's VMEM-resident φ (DESIGN.md §17.3).
+
+    ``REPRO_MEGAKERNEL_PHI_DTYPE=bfloat16`` halves the resident footprint
+    (doubling the graph size :func:`megakernel_fits` admits); accumulation
+    stays f32 regardless.  Re-read per call like every other knob.
+    """
+    val = os.environ.get("REPRO_MEGAKERNEL_PHI_DTYPE", "float32")
+    if val not in ("float32", "bfloat16"):
+        raise ValueError(
+            f"REPRO_MEGAKERNEL_PHI_DTYPE must be 'float32' or 'bfloat16', "
+            f"got {val!r}")
+    return val
+
+
+def _round_up(n: int, mult: int = 128) -> int:
+    return ((n + mult - 1) // mult) * mult
+
+
+def megakernel_fits(n_sessions: int, n_bar: int, itemsize: int = 4) -> bool:
+    """VMEM residency check for the fused control step (DESIGN.md §17.2).
+
+    The kernel keeps φ [W, N̄p, N̄p] resident at ``itemsize`` bytes (4 for
+    f32 storage, 2 for bf16) plus f32 working state: flows t [W, N̄p],
+    link flows F [N̄p, N̄p], marginal prices D′ [N̄p, N̄p], and O(W)
+    gradient/allocation vectors.  All sizes use the 128-padded node count
+    the kernel actually allocates.
+    """
+    n_pad = _round_up(max(int(n_bar), 1))
+    w = max(int(n_sessions), 1)
+    phi_bytes = w * n_pad * n_pad * itemsize
+    work_bytes = (2 * n_pad * n_pad + 2 * w * n_pad + 8 * w) * 4
+    return phi_bytes + work_bytes <= MEGAKERNEL_VMEM_BUDGET
+
+
+def use_megakernel(n_bar: int, n_sessions: int, itemsize: int = 4) -> bool:
+    """True when the fused control step should replace the stitched sweep.
+
+    Conditions: n̄ clears :func:`megakernel_threshold`; the resident state
+    passes :func:`megakernel_fits`; and either a real TPU backend or an
+    explicit opt-in (env var / setter / ``megakernel_dispatch``) — same
+    interpret-mode policy as :func:`use_kernels`.
+    """
+    if n_bar < megakernel_threshold():
+        return False
+    if not megakernel_fits(n_sessions, n_bar, itemsize):
+        return False
+    return _megakernel_explicit() or jax.default_backend() == "tpu"
 
 
 # --------------------------------------------------------------------------
@@ -226,11 +365,16 @@ def state_key() -> tuple:
     instead of silently reusing a cached jnp-path executable (see the
     module docstring's trace-time caveat).  Includes the sparse policy
     (a router tracing under ``sparse_dispatch`` must not reuse a dense
-    trace) and the fleet mesh (an executable traced for an 8-way
-    ``shard_map`` must not alias the 1-device or vmap one).
+    trace), the megakernel policy, and the fleet mesh (an executable
+    traced for an 8-way ``shard_map`` must not alias the 1-device or vmap
+    one).  Every component re-reads its env knob, so mutating
+    ``os.environ`` after import changes the key — and with it every
+    downstream lru cache entry — on the next call.
     """
-    return (_threshold, _explicit, _sparse_threshold, _sparse_density,
-            _fleet_key)
+    return (kernel_threshold(), _kernel_explicit(),
+            sparse_threshold(), sparse_density_max(),
+            megakernel_threshold(), _megakernel_explicit(),
+            megakernel_phi_dtype(), _fleet_key)
 
 
 def use_kernels(n_bar: int) -> bool:
@@ -240,9 +384,9 @@ def use_kernels(n_bar: int) -> bool:
     explicit threshold override (interpret mode is a validation tool, not
     a production fallback — it is far slower than the jnp path).
     """
-    if n_bar < _threshold:
+    if n_bar < kernel_threshold():
         return False
-    return _explicit or jax.default_backend() == "tpu"
+    return _kernel_explicit() or jax.default_backend() == "tpu"
 
 
 def kernel_interpret() -> bool:

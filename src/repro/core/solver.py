@@ -37,6 +37,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import os
 from typing import Any, Literal, NamedTuple
 
 import jax
@@ -319,6 +320,42 @@ def _sampled_step(problem: Problem, config: SolverConfig, state: SolverState,
             StepInfo(grad=g, cost=D))
 
 
+def _megakernel_step(problem: Problem, config: SolverConfig,
+                     state: SolverState,
+                     task_utilities: Array) -> tuple[SolverState, StepInfo]:
+    """The one-kernel fused control step (DESIGN.md §17).
+
+    Semantically :func:`_sampled_step` — same observation order, same
+    oracle, same commit — executed as a single Pallas kernel whose
+    iterates stay VMEM-resident across all 2W+1 observations
+    (``kernels/control_megakernel.py``).  η's and δ are baked as static
+    kernel parameters (the config's Python floats), so this path is only
+    reachable from :func:`step`, never :func:`step_with_etas`.  The
+    ``REPRO_MEGAKERNEL_PHI_DTYPE=bfloat16`` knob narrows the φ *storage*
+    to bf16 (accumulation stays f32 — §17.3 bounds the drift).
+    """
+    from repro.kernels import ops as kops
+
+    graph, cost = problem.graph, problem.cost
+    interpret = dispatch.kernel_interpret()
+    phi_dtype = dispatch.megakernel_phi_dtype()
+    if isinstance(graph, CECGraphSparse):
+        lam, rows, src_phi, g, D = kops.control_step_sparse_op(
+            state.lam, state.phi.rows, state.phi.src, task_utilities,
+            problem.lam_total, graph, config.oracle_iters, config.delta,
+            config.eta_outer, config.eta_inner, cost, phi_dtype=phi_dtype,
+            interpret=interpret)
+        phi = SparsePhi(rows=rows, src=src_phi)
+    else:
+        lam, phi, g, D = kops.control_step_op(
+            state.lam, state.phi, task_utilities, problem.lam_total, graph,
+            config.oracle_iters, config.delta, config.eta_outer,
+            config.eta_inner, cost, phi_dtype=phi_dtype,
+            interpret=interpret)
+    return (SolverState(lam=lam, phi=phi, t=state.t + 1),
+            StepInfo(grad=g, cost=D))
+
+
 def _task_value_fn(problem: Problem):
     """λ ↦ Σ_w u_w(λ_w) for the learned gradient: the fitted surrogate
     when one is attached, else the closed-form bank (genie-gradient
@@ -393,6 +430,10 @@ def step(problem: Problem, config: SolverConfig, state: SolverState,
     """
     if config.grad_mode == "learned":
         return _learned_step(problem, config, state, task_utilities)
+    graph = problem.graph
+    itemsize = 2 if dispatch.megakernel_phi_dtype() == "bfloat16" else 4
+    if dispatch.use_megakernel(graph.n_bar, graph.n_sessions, itemsize):
+        return _megakernel_step(problem, config, state, task_utilities)
     return _sampled_step(problem, config, state, task_utilities,
                          config.eta_outer, config.eta_inner)
 
@@ -408,11 +449,14 @@ def step_with_etas(problem: Problem, config: SolverConfig,
     (``float(eta)``), so meta-tuning under kernel dispatch is refused
     loudly rather than failing inside a trace (DESIGN.md §16.3).
     """
-    if dispatch.use_kernels(problem.graph.n_bar):
+    graph = problem.graph
+    if (dispatch.use_kernels(graph.n_bar)
+            or dispatch.use_megakernel(graph.n_bar, graph.n_sessions)):
         raise NotImplementedError(
             "step_with_etas traces η through the OMD update, but the "
-            "Pallas kernel path needs a static Python-float η — run "
-            "hypergradient tuning with kernel dispatch off (jnp path)")
+            "Pallas kernel paths (per-phase and megakernel alike) need a "
+            "static Python-float η — run hypergradient tuning with kernel "
+            "dispatch off (jnp path)")
     return _sampled_step(problem, config, state, task_utilities,
                          eta_outer, eta_inner)
 

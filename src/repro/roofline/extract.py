@@ -1,40 +1,175 @@
-"""Scan-aware cost extraction for the roofline (§Roofline methodology).
+"""Compiled-cost extraction for the roofline (§Roofline methodology).
 
+Primary mode — **control-kernel roofline** (DESIGN.md §17.5): lower and
+compile the fused control megakernel (``kernels/control_megakernel.py``)
+and the stitched ``solver.step`` it replaces on the *same* problem shape,
+read attained FLOPs and HBM bytes from ``compiled.cost_analysis()``, and
+place both programs on the §Roofline axes (arithmetic intensity vs the
+ridge point ``PEAK_FLOPS / HBM_BW``).  :func:`control_step_costs` returns
+the raw per-program records; :func:`control_roofline_rows` turns them
+into trajectory-schema rows that ``benchmarks/bench_megakernel.py``
+publishes into ``benchmarks/trajectory/BENCH_<sha>.json``.
+
+Legacy mode — the scan-aware LM-stack analyzer this module started as,
+kept because ``benchmarks/perf_iterations.py`` drives it through the
+``python -m repro.roofline.extract --arch A --shape S --out DIR`` CLI.
 ``compiled.cost_analysis()`` counts a ``lax.scan`` body ONCE, so a
-62-layer stack reports ~1 layer of FLOPs.  Because every stack here is a
-homogeneous repetition of one period, every cost is affine in the period
-count:  X(L) = X(1) + (L−1)·ΔX.  We therefore compile two shallow
-variants of each cell (1 and 2 periods, same shapes/sharding) and
-extrapolate — exact for compute, HBM bytes and collective wire bytes,
-including the out-of-loop terms (embeddings, logits, FSDP all-gathers of
-the stacked parameters) which the affine form also captures.
+62-layer stack reports ~1 layer of FLOPs; every stack is a homogeneous
+repetition of one period, so every cost is affine in the period count —
+X(L) = X(1) + (L−1)·ΔX — and we compile two shallow variants (1 and 2
+periods) and extrapolate.  Analysis mode additionally unchunks attention
+so the full O(S²) FLOPs are visible; FLOPs inside per-token recurrent
+scans stay counted once (<10% for every assigned arch, EXPERIMENTS.md).
 
-Analysis mode additionally disables attention q-chunking (the chunk loop
-is itself a scan) so the full O(S²) attention FLOPs are visible to the
-cost model.  Known residual: FLOPs *inside* per-token recurrent scans
-(mamba/mLSTM state updates) remain counted once; for every assigned arch
-these are <10% of the matmul FLOPs (the projections sit outside the
-scan) — noted in EXPERIMENTS.md.
+Importing this module has **no side effects**: the legacy path needs a
+512-device host platform (``make_production_mesh``), and earlier
+revisions forced it by mutating ``XLA_FLAGS`` at import time — poisoning
+every later jax user in the process (the CPU backend would shard tiny
+control-plane arrays across 512 fake devices).  The forced-device flag
+is now scoped to a subprocess: :func:`main` re-execs itself with
+``XLA_FLAGS`` set in the child's environment when the legacy sweep needs
+it, and in-process callers of :func:`analyze_cell` must pass a ``mesh``
+(or arrange the flag themselves *before* jax initialises).
 """
 from __future__ import annotations
 
-import os
-
-os.environ.setdefault("XLA_FLAGS",
-                      "--xla_force_host_platform_device_count=512")
-
 import dataclasses
 import json
+import os
 import pathlib
 
+# NOTE: no ``os.environ`` writes at import — see the module docstring.
 import jax
 
-from repro.configs import SHAPES, applicable, get_config
-from repro.launch.mesh import dp_axes, make_production_mesh
-from repro.parallel.annotate import activation_sharding
-from repro.roofline.analysis import model_flops
-from repro.roofline.hlo import parse_collectives
+from repro.roofline.analysis import (HBM_BW, PEAK_FLOPS, model_flops,
+                                     roofline_terms)
 
+#: host-platform device count the legacy LM-stack meshes require; applied
+#: only inside the re-exec'd CLI subprocess, never to the importing process
+FORCED_DEVICE_FLAG = "--xla_force_host_platform_device_count=512"
+
+
+# --------------------------------------------------------------------------
+# control-kernel roofline (primary): megakernel vs stitched control step
+# --------------------------------------------------------------------------
+
+def _cost_record(compiled) -> dict:
+    """FLOPs / HBM bytes / arithmetic intensity of one compiled program."""
+    ca = compiled.cost_analysis()
+    ca = ca[0] if isinstance(ca, (list, tuple)) else ca
+    flops = float(ca.get("flops", 0.0))
+    hbm = float(ca.get("bytes accessed", 0.0))
+    return {"flops": flops, "bytes": hbm,
+            "intensity": flops / hbm if hbm else 0.0}
+
+
+def control_step_costs(n_nodes: int = 24, n_sessions: int = 6, *,
+                       k_iters: int = 3, phi_dtype: str = "float32",
+                       seed: int = 0) -> dict:
+    """Compile the fused megakernel and the stitched step on one shape.
+
+    Builds a random CEC instance (``n_nodes`` physical nodes,
+    ``n_sessions`` sessions, K = ``k_iters`` oracle iterations), traces
+    both control-step programs on it, and reads each
+    ``compiled.cost_analysis()``.  Returns::
+
+        {"megakernel": {flops, bytes, intensity},
+         "stitched":   {flops, bytes, intensity},
+         "shape": {...}}
+
+    Dispatch overrides are scoped to tracing (``megakernel_dispatch`` and
+    the φ-dtype env knob are restored on exit); nothing is executed, so
+    this is cheap enough for CI.  Off-TPU the megakernel lowers in
+    interpret mode, where ``cost_analysis`` sees the *interpreter*
+    program, not the Mosaic kernel — the FLOP/byte record is exact only
+    on a real TPU backend and indicative elsewhere (the bench gates its
+    real bar on TPU accordingly).
+    """
+    import jax.numpy as jnp
+
+    from repro.core import build_random_cec, dispatch, solver
+    from repro.core.problem import Problem
+    from repro.topo import connected_er
+
+    g = build_random_cec(connected_er(n_nodes, 0.35, seed=seed),
+                         n_sessions, 10.0, seed=seed)
+    problem = Problem.create(g, lam_total=8.0, cost="exp")
+    config = solver.SolverConfig(method="nested", delta=0.5, eta_outer=0.05,
+                                 eta_inner=0.05, inner_iters=k_iters,
+                                 grad_mode="sampled")
+    state = solver.init(problem, config)
+    tau = jnp.ones((2 * g.n_sessions,), jnp.float32)
+
+    def mega(state, tau):
+        return solver._megakernel_step(problem, config, state, tau)
+
+    def stitched(state, tau):
+        return solver._sampled_step(problem, config, state, tau,
+                                    config.eta_outer, config.eta_inner)
+
+    prev_dtype = os.environ.get("REPRO_MEGAKERNEL_PHI_DTYPE")
+    try:
+        os.environ["REPRO_MEGAKERNEL_PHI_DTYPE"] = phi_dtype
+        with dispatch.megakernel_dispatch(1):
+            mk = jax.jit(mega).lower(state, tau).compile()
+    finally:
+        if prev_dtype is None:
+            os.environ.pop("REPRO_MEGAKERNEL_PHI_DTYPE", None)
+        else:
+            os.environ["REPRO_MEGAKERNEL_PHI_DTYPE"] = prev_dtype
+    st = jax.jit(stitched).lower(state, tau).compile()
+
+    return {"megakernel": _cost_record(mk),
+            "stitched": _cost_record(st),
+            "shape": {"n_nodes": n_nodes, "n_bar": int(g.n_bar),
+                      "n_sessions": n_sessions, "k_iters": k_iters,
+                      "phi_dtype": phi_dtype,
+                      "backend": jax.default_backend()}}
+
+
+def control_roofline_rows(costs: dict | None = None, **shape_kw) -> list:
+    """Trajectory-schema roofline rows for the two control-step programs.
+
+    Each row carries the raw ``cost_analysis`` FLOPs/bytes, the
+    arithmetic intensity, its position against the ridge point
+    ``PEAK_FLOPS / HBM_BW`` (v5e: ~240 FLOP/byte), and the three-term
+    roofline split from :func:`analysis.roofline_terms` (wire bytes are
+    zero — the control step is single-chip).  ``attained_peak_fraction``
+    is the fraction of peak compute the program can reach at its
+    intensity assuming it hits the memory roof — the number the §17
+    speedup claim is checked against.
+    """
+    costs = costs or control_step_costs(**shape_kw)
+    ridge = PEAK_FLOPS / HBM_BW
+    rows = []
+    for variant in ("megakernel", "stitched"):
+        c = costs[variant]
+        t = roofline_terms(c["flops"], c["bytes"], 0.0, 1)
+        rows.append({
+            "metric": f"roofline.control_step.{variant}",
+            "variant": variant, **costs["shape"],
+            "flops": c["flops"], "hbm_bytes": c["bytes"],
+            "intensity_flop_per_byte": c["intensity"],
+            "ridge_flop_per_byte": ridge,
+            "bound": "compute" if c["intensity"] >= ridge else "memory",
+            "attained_peak_fraction": min(c["intensity"] / ridge, 1.0),
+            "compute_s": t["compute_s"], "memory_s": t["memory_s"],
+        })
+    mk, st = costs["megakernel"], costs["stitched"]
+    if mk["bytes"] and st["bytes"]:
+        rows.append({
+            "metric": "roofline.control_step.bytes_ratio",
+            **costs["shape"],
+            "value": st["bytes"] / mk["bytes"],
+            "note": "stitched/megakernel HBM-byte ratio — the fused "
+                    "kernel's VMEM residency removes per-phase HBM "
+                    "round-trips (DESIGN.md §17.2)"})
+    return rows
+
+
+# --------------------------------------------------------------------------
+# legacy LM-stack analyzer (scan-aware affine extrapolation)
+# --------------------------------------------------------------------------
 
 def _variant(cfg, n_periods: int):
     kw = dict(n_layers=len(cfg.period) * n_periods)
@@ -58,9 +193,13 @@ def _cell_costs(arch: str, shape_name: str, n_periods: int, mesh,
     from the unchunked compile and collective wire bytes from the chunked
     (production) compile.
     """
+    from repro.configs import get_config
     from repro.launch import dryrun as D
+    from repro.launch.mesh import dp_axes
     from repro.models import layers as L
     from repro.models import model as M
+    from repro.parallel.annotate import activation_sharding
+    from repro.roofline.hlo import parse_collectives
 
     cfg_full = get_config(arch)
     cfg = _variant(cfg_full, n_periods)
@@ -100,6 +239,19 @@ def _cell_costs(arch: str, shape_name: str, n_periods: int, mesh,
 
 def analyze_cell(arch: str, shape_name: str, outdir="experiments/roofline",
                  mesh=None) -> dict | None:
+    """Scan-corrected roofline record for one LM arch × shape cell.
+
+    In-process callers must pass ``mesh`` (the production mesh needs a
+    512-device host platform; arrange ``XLA_FLAGS`` before jax
+    initialises, or go through the CLI, which scopes the flag to a
+    subprocess).  With ``mesh=None`` this builds
+    ``make_production_mesh()`` against whatever devices exist and will
+    raise on a plain CPU host — by design, instead of silently mutating
+    global process state the way earlier revisions did.
+    """
+    from repro.configs import SHAPES, applicable, get_config
+    from repro.launch.mesh import make_production_mesh
+
     cfg = get_config(arch)
     ok, why = applicable(cfg, shape_name)
     rec = {"arch": arch, "shape": shape_name, "mesh": "single"}
@@ -176,16 +328,62 @@ def analyze_cell(arch: str, shape_name: str, outdir="experiments/roofline",
     return rec
 
 
-def main():
-    import argparse
+def _needs_forced_devices() -> bool:
+    return "xla_force_host_platform_device_count" not in \
+        os.environ.get("XLA_FLAGS", "")
 
-    from repro.configs import ARCH_IDS
+
+def _reexec_with_forced_devices() -> int:
+    """Run the legacy CLI sweep in a child whose env carries the flag.
+
+    This is the *only* place the 512-device host platform is requested,
+    and it never leaks into the invoking process (the import-purity
+    contract pinned by tests/test_roofline_extract.py).
+    """
+    import subprocess
+    import sys
+
+    flags = (os.environ.get("XLA_FLAGS", "") + " " + FORCED_DEVICE_FLAG)
+    env = dict(os.environ, XLA_FLAGS=flags.strip())
+    r = subprocess.run([sys.executable, "-m", "repro.roofline.extract",
+                        *sys.argv[1:]], env=env)
+    return r.returncode
+
+
+def main() -> int:
+    import argparse
 
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default=None)
     ap.add_argument("--shape", default=None)
     ap.add_argument("--out", default="experiments/roofline")
+    ap.add_argument("--control", action="store_true",
+                    help="control-kernel mode: megakernel-vs-stitched "
+                         "roofline rows for the CEC control step (single "
+                         "chip — no forced-device subprocess needed)")
     args = ap.parse_args()
+
+    if args.control:
+        out = pathlib.Path(args.out)
+        out.mkdir(parents=True, exist_ok=True)
+        rows = control_roofline_rows()
+        (out / "control_step.json").write_text(json.dumps(rows, indent=1))
+        for r in rows:
+            if "intensity_flop_per_byte" in r:
+                print(f"[control_step × {r['variant']}] "
+                      f"flops={r['flops']:.3g} bytes={r['hbm_bytes']:.3g} "
+                      f"intensity={r['intensity_flop_per_byte']:.2f} "
+                      f"({r['bound']}-bound)", flush=True)
+        return 0
+
+    # legacy LM-stack sweep: the production mesh needs 512 host devices —
+    # request them in a child process, never in this one
+    if _needs_forced_devices():
+        return _reexec_with_forced_devices()
+
+    from repro.configs import ARCH_IDS, SHAPES
+    from repro.launch.mesh import make_production_mesh
+
     mesh = make_production_mesh(multi_pod=False)
     archs = (args.arch,) if args.arch else ARCH_IDS
     shapes = (args.shape,) if args.shape else tuple(SHAPES)
@@ -202,7 +400,8 @@ def main():
                     print(f"[{a} × {s}] skipped", flush=True)
             except Exception as e:  # noqa: BLE001
                 print(f"[{a} × {s}] FAILED: {e!r}", flush=True)
+    return 0
 
 
 if __name__ == "__main__":
-    main()
+    raise SystemExit(main())

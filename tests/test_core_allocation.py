@@ -157,6 +157,57 @@ def test_project_box_simplex_properties(seed, W, lam_total, delta):
     np.testing.assert_allclose(x2, x, atol=1e-3 * lam_total)
 
 
+# ---------------------------------------------------------------------------
+# legacy shims thread the outer counter (t-threading regression)
+# ---------------------------------------------------------------------------
+
+def test_legacy_shims_thread_the_outer_counter(small_cec):
+    """Regression: ``control_step``/``fused_control_step`` used to rebuild
+    ``SolverState`` with a hard ``t=0`` every call, so a legacy host loop
+    silently froze the solver clock at zero — every t-dependent schedule
+    saw iteration 0 forever.  The shims now accept the previous call's
+    ``ControlStep.t`` and return the advanced counter, and a threaded
+    legacy loop reproduces ``solver.run``'s scan exactly (same iterates,
+    same clock)."""
+    import jax
+
+    from repro.core import solver as S
+    from repro.core.allocation import (control_step, fused_control_step,
+                                       perturbed_allocations)
+    from repro.core.problem import Problem
+    from repro.core.solver import SolverConfig
+
+    cost = get_cost("exp")
+    bank = make_bank("log", 3, seed=0, lam_total=LAM_TOTAL)
+    problem = Problem(graph=small_cec, bank=bank, lam_total=LAM_TOTAL,
+                      cost=cost)
+    config = SolverConfig.from_legacy(delta=0.5, eta_outer=0.05,
+                                      eta_inner=3.0, inner_iters=2)
+    ref = S.run(problem, config, iters=3)
+    assert int(ref.state.t) == 3
+
+    state = S.init(problem, config)
+    fn = fused_control_step("exp", delta=0.5, eta_outer=0.05,
+                            eta_inner=3.0, inner_iters=2)
+    lam, phi, t = state.lam, state.phi, 0
+    for k in range(3):
+        tau = jax.vmap(bank.total)(perturbed_allocations(lam, 0.5))
+        out = fn(small_cec, lam, phi, tau, LAM_TOTAL, t=t)
+        lam, phi, t = out.lam, out.phi, out.t
+        assert int(t) == k + 1          # would stay 1 under the old reset
+    np.testing.assert_allclose(np.asarray(lam), np.asarray(ref.lam),
+                               atol=1e-5)
+    np.testing.assert_allclose(np.asarray(phi), np.asarray(ref.phi),
+                               atol=1e-5)
+
+    # the eager shim advances an arbitrary threaded counter too
+    tau = jax.vmap(bank.total)(perturbed_allocations(state.lam, 0.5))
+    out = control_step(small_cec, cost, state.lam, state.phi, tau,
+                       lam_total=LAM_TOTAL, delta=0.5, eta_outer=0.05,
+                       eta_inner=3.0, inner_iters=2, t=7)
+    assert int(out.t) == 8
+
+
 @settings(max_examples=20, deadline=None)
 @given(kind=st.sampled_from(["linear", "sqrt", "quadratic", "log"]),
        seed=st.integers(0, 1000))

@@ -147,7 +147,10 @@ def test_legacy_result_shapes_are_pinned():
     from repro.core import ControlStep, JOWRResult
 
     assert JOWRResult._fields == ("lam", "phi", "utility_traj", "lam_traj")
-    assert ControlStep._fields == ("lam", "phi", "grad", "cost")
+    # t rides at the END so positional unpacking of the first four legacy
+    # fields keeps working (the t-threading bugfix — legacy loops used to
+    # have their counter silently reset to 0 every call)
+    assert ControlStep._fields == ("lam", "phi", "grad", "cost", "t")
 
 
 def test_solver_core_is_the_only_update_site():
@@ -156,11 +159,16 @@ def test_solver_core_is_the_only_update_site():
     (core/opt_baseline.py, true-gradient, no box projection) is a
     deliberately *different* algorithm and the one allowed look-alike;
     the pre-PR-3 host loop preserved in benchmarks/bench_router.py is
-    the one allowed copy outside src/."""
+    the one allowed copy outside src/.  The control megakernel
+    (kernels/control_megakernel.py, DESIGN.md §17) is the one allowed
+    copy *inside* src/: the fused kernel must carry the update in its
+    own body by construction, and tests/test_megakernel.py pins it to
+    solver.step at ≤1e-5 so the copies cannot drift apart silently."""
     import pathlib
 
     src = pathlib.Path(repro.__file__).parent
     hits = [p.relative_to(src).as_posix()
             for p in sorted(src.rglob("*.py"))
             if "jnp.exp(z)" in p.read_text()]
-    assert hits == ["core/opt_baseline.py", "core/solver.py"], hits
+    assert hits == ["core/opt_baseline.py", "core/solver.py",
+                    "kernels/control_megakernel.py"], hits

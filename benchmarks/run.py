@@ -34,10 +34,10 @@ MODULES = ("fig7_routing_convergence", "fig8_9_network_size",
            "table2_topologies", "bench_kernels", "bench_batched",
            "bench_scenarios", "bench_router", "bench_sparse",
            "bench_fleet", "bench_serving", "bench_learned",
-           "bench_megakernel", "perf_iterations")
+           "bench_megakernel", "bench_obs", "perf_iterations")
 
 TRAJECTORY_DIR = pathlib.Path("benchmarks/trajectory")
-TRAJECTORY_SCHEMA = 2
+TRAJECTORY_SCHEMA = 3
 
 
 def _git(*args: str) -> str:
@@ -75,6 +75,11 @@ def write_trajectory_entry(summary: dict) -> pathlib.Path:
     ``bench_serving``'s p50/p99 control-interval latency per churn trace
     (README "Perf trajectory" documents how to read them).  Every other
     module still has its rows stripped to keep entries small.
+
+    Schema 3 (additive): ``dirty`` and ``jax_version`` are first-class,
+    always-present keys (``jax`` stays as the legacy alias).  Consumers
+    must go through :func:`read_trajectory`, which back-fills both on
+    schema-1/2 rows instead of KeyError-ing on history.
     """
     import jax
 
@@ -87,6 +92,7 @@ def write_trajectory_entry(summary: dict) -> pathlib.Path:
         "smoke": common.SMOKE,
         "python": platform.python_version(),
         "jax": jax.__version__,
+        "jax_version": jax.__version__,
         "backend": jax.default_backend(),
         "benches": summary,
     }
@@ -94,6 +100,28 @@ def write_trajectory_entry(summary: dict) -> pathlib.Path:
     path = TRAJECTORY_DIR / f"BENCH_{commit}.json"
     path.write_text(json.dumps(entry, indent=1, default=str))
     return path
+
+
+def read_trajectory(directory: pathlib.Path | str = TRAJECTORY_DIR
+                    ) -> list[dict]:
+    """Load every trajectory entry, oldest first, schema-tolerantly.
+
+    Pre-schema-3 rows lack the first-class ``dirty``/``jax_version``
+    keys; rather than make every consumer special-case history, this
+    reader back-fills them (``jax_version`` from the legacy ``jax`` key,
+    ``dirty`` conservatively ``True`` when a row predates the flag) and
+    guarantees ``benches`` exists.  Newer keys pass through untouched —
+    the schema only ever grows.
+    """
+    entries = []
+    for path in sorted(pathlib.Path(directory).glob("BENCH_*.json")):
+        entry = json.loads(path.read_text())
+        entry.setdefault("jax_version", entry.get("jax", "unknown"))
+        entry.setdefault("dirty", True)
+        entry.setdefault("benches", {})
+        entries.append(entry)
+    entries.sort(key=lambda e: e.get("date", ""))
+    return entries
 
 
 def main() -> None:

@@ -1,0 +1,80 @@
+"""Structural diff-gate for the committed BENCH_smoke.json (CI bench-smoke).
+
+The root ``BENCH_smoke.json`` is a *convenience snapshot* of the smoke
+summary; the CI artifact uploaded from the bench-smoke job is the
+canonical record for any given commit (README "Benchmarks").  The
+snapshot still must not rot: a PR that adds or removes a benchmark
+module without regenerating it would leave the committed file lying
+about what the suite runs.
+
+This gate compares the freshly-written summary against the version
+committed at HEAD **structurally** — module set, per-module status, and
+the failed list.  Timings (``seconds``, ``med_latency_us``), versions
+and rows are run-dependent by design and ignored.  On mismatch it exits
+non-zero with the per-module delta and the one-line fix:
+
+    PYTHONPATH=src python -m benchmarks.run --smoke   # then commit
+    git add BENCH_smoke.json                          # BENCH_smoke.json
+
+Usage:  python scripts/check_bench_smoke.py [fresh.json]
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import subprocess
+import sys
+
+
+def _structure(summary: dict) -> dict:
+    mods = summary.get("modules", {})
+    return {
+        "modules": {name: info.get("status") for name, info in mods.items()},
+        "failed": sorted(summary.get("failed", [])),
+    }
+
+
+def _committed(path: str = "BENCH_smoke.json") -> dict | None:
+    try:
+        out = subprocess.run(["git", "show", f"HEAD:{path}"],
+                             capture_output=True, text=True, check=True)
+        return json.loads(out.stdout)
+    except (subprocess.CalledProcessError, json.JSONDecodeError):
+        return None
+
+
+def main(fresh_path: str = "BENCH_smoke.json") -> int:
+    fresh = json.loads(pathlib.Path(fresh_path).read_text())
+    committed = _committed()
+    if committed is None:
+        print("FAIL: no BENCH_smoke.json committed at HEAD — run the smoke "
+              "suite and commit its summary:\n"
+              "  PYTHONPATH=src python -m benchmarks.run --smoke\n"
+              "  git add BENCH_smoke.json", file=sys.stderr)
+        return 1
+
+    want, got = _structure(fresh), _structure(committed)
+    if want == got:
+        print(f"BENCH_smoke.json structure is current "
+              f"({len(want['modules'])} modules, "
+              f"{len(want['failed'])} failed)")
+        return 0
+
+    fresh_mods, old_mods = want["modules"], got["modules"]
+    for name in sorted(set(fresh_mods) | set(old_mods)):
+        a, b = old_mods.get(name), fresh_mods.get(name)
+        if a != b:
+            print(f"  {name}: committed={a!r} fresh={b!r}", file=sys.stderr)
+    if want["failed"] != got["failed"]:
+        print(f"  failed: committed={got['failed']} fresh={want['failed']}",
+              file=sys.stderr)
+    print("FAIL: committed BENCH_smoke.json is structurally stale against "
+          "this run — regenerate and commit it "
+          "(PYTHONPATH=src python -m benchmarks.run --smoke; "
+          "git add BENCH_smoke.json).  The uploaded CI artifact stays the "
+          "canonical per-commit record.", file=sys.stderr)
+    return 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(*sys.argv[1:]))

@@ -18,6 +18,10 @@ Gated packages:
   pytest-cov cannot see — the in-process 1-device parity + property
   tests (fleet specs, pad/unpad, shard_map compat, int8 collectives,
   annotate) are what this gate actually guards.
+* ``src/repro/obs/`` — the observability subsystem (ISSUE 10, DESIGN.md
+  §18): telemetry rings, paper-invariant monitors, trace/JSONL export.
+  Pure host-visible code with a dedicated suite (tests/test_obs.py);
+  floor 85%.
 
 Floors are *minus a small flake margin* under what the suite measures.
 Policy: ratchet them upward as coverage grows; never lower one to make a
@@ -39,6 +43,10 @@ import sys
 GATES = (
     ("repro/core/", 80.0, "REPRO_CORE_COV_MIN"),
     ("repro/parallel/", 25.0, "REPRO_PARALLEL_COV_MIN"),
+    # the observability subsystem (ISSUE 10, DESIGN.md §18): rings,
+    # monitors, exporters are all host-visible pure code, so the tier-1
+    # suite should cover nearly all of it — gated at 85%.
+    ("repro/obs/", 85.0, "REPRO_OBS_COV_MIN"),
 )
 
 # per-file floors for the differentiable-core modules (PR 8): the implicit

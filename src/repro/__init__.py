@@ -37,7 +37,8 @@ _CORE_EXPORTS = (
 # names resolved from repro.serve on first access (pulls the model stack)
 _SERVE_EXPORTS = ("CECRouter", "InferenceEngine", "ServingSim")
 _SUBMODULES = ("core", "configs", "topo", "kernels", "serve", "parallel",
-               "models", "train", "optim", "data", "launch", "roofline")
+               "models", "train", "optim", "data", "launch", "roofline",
+               "obs")
 
 __all__ = [*_CORE_EXPORTS, *_SERVE_EXPORTS, *_SUBMODULES]
 

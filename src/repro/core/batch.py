@@ -378,15 +378,28 @@ def _vmapped_run(batch, banks, lam_total, config, *, iters, costfn,
 @functools.lru_cache(maxsize=None)
 def _fused_step_batch(config: SolverConfig, costfn, donate: bool,
                       util_family: str | None, _dispatch_key):
-    def fn(graph, lam_total, state, task_utilities, util_params=None):
-        def one(g, lt, s, u, p):
-            problem = Problem(graph=g, bank=None, lam_total=lt, cost=costfn,
-                              util_params=p, util_family=util_family)
-            return _solver.step(problem, config, s, u)
+    def one(g, lt, s, u, p, tel):
+        problem = Problem(graph=g, bank=None, lam_total=lt, cost=costfn,
+                          util_params=p, util_family=util_family)
+        return _solver.step(problem, config, s, u, tel)
 
+    if config.telemetry > 0:
+        # telemetry rides as a stacked [K]-ring pytree right after the
+        # state so (state, telemetry) donate as a pair — the recording
+        # fleet steady state allocates nothing per interval (§18.1)
+        def fn(graph, lam_total, state, task_utilities, telemetry,
+               util_params=None):
+            params_axis = None if util_params is None else 0
+            return jax.vmap(one, in_axes=(0, 0, 0, 0, params_axis, 0))(
+                graph, lam_total, state, task_utilities, util_params,
+                telemetry)
+
+        return jax.jit(fn, donate_argnums=(2, 4) if donate else ())
+
+    def fn(graph, lam_total, state, task_utilities, util_params=None):
         params_axis = None if util_params is None else 0
-        return jax.vmap(one, in_axes=(0, 0, 0, 0, params_axis))(
-            graph, lam_total, state, task_utilities, util_params)
+        return jax.vmap(one, in_axes=(0, 0, 0, 0, params_axis, None))(
+            graph, lam_total, state, task_utilities, util_params, None)
 
     return jax.jit(fn, donate_argnums=(2,) if donate else ())
 
@@ -407,9 +420,16 @@ def fused_step_batch(config: SolverConfig, *, cost="exp",
     step *is* the single-tenant step.
 
     With ``util_family`` set (and ``config.grad_mode="learned"``) the
-    returned fn accepts a fifth argument: stacked [K, W, P] fitted
+    returned fn accepts a trailing argument: stacked [K, W, P] fitted
     ``util_params`` — a data leaf, so per-tenant refits never retrace
     (DESIGN.md §16.4); ``task_utilities`` is then ignored (pass zeros).
+
+    With ``config.telemetry > 0`` the returned fn takes a stacked
+    ``[K]``-lane obs ring as its fifth positional argument —
+    ``fn(graph, lam_total, state, task_utilities, telemetry,
+    util_params=None)`` — records every lane inside the jit, returns the
+    updated ring third, and donates it together with the state
+    (DESIGN.md §18.1).
 
     ``donate=True`` donates the stacked ``state`` so the K control
     iterations update in place (the ``RouterFleet`` steady state,

@@ -390,12 +390,18 @@ def run_scenario(
                               eta_outer=float(eta_outer),
                               eta_inner=float(eta_inner),
                               inner_iters=int(inner_iters))
+    from repro.obs import trace as _obs_trace
+
     segments = compile_segments(scenario, seeds)
     state: SolverState | None = None
     u_trajs, lam_trajs = [], []
     for k, seg in enumerate(segments):
         if k > 0:
             prev = segments[k - 1]
+            for e in seg.events:
+                _obs_trace.instant(f"event:{e.kind}", cat="scenario",
+                                   args={"kind": e.kind, "segment": k,
+                                         "at": seg.start})
             if any(e.changes_graph for e in seg.events):
                 state = state._replace(phi=warm_start_phi(
                     state.phi, seg.batch.out_mask, explore))
@@ -405,7 +411,15 @@ def run_scenario(
                 state = state._replace(lam=lam)
         solve = _segment_solver(config, cost_name, seg.n_iters, mesh,
                                 dispatch.state_key())
-        res = solve(seg.batch, seg.banks, jnp.float32(seg.lam_total), state)
+        with _obs_trace.span("scenario.segment", cat="scenario",
+                             args={"segment": k, "start": seg.start,
+                                   "iters": seg.n_iters,
+                                   "lam_total": float(seg.lam_total)}):
+            res = solve(seg.batch, seg.banks, jnp.float32(seg.lam_total),
+                        state)
+            if _obs_trace.current_tracer() is not None:
+                # make the span cover the solve, not just the dispatch
+                res.utility_traj.block_until_ready()
         state = res.state
         u_trajs.append(res.utility_traj)
         lam_trajs.append(res.lam_traj)

@@ -78,6 +78,12 @@ class SolverConfig:
     a closed-form ``bank``) through the implicit routing fixed point —
     one analytic gradient evaluation + the committed observation, 2
     oracle calls per iteration.
+
+    ``telemetry`` is the observability ring capacity (DESIGN.md §18):
+    0 (default) records nothing; N > 0 makes :func:`step` accept/return a
+    ``repro.obs.Telemetry`` ring of N rows and :func:`run`/
+    :func:`fused_step` thread it — static, so each capacity compiles its
+    own executable (rings never resize in-flight).
     """
 
     method: Method = "single"
@@ -86,6 +92,7 @@ class SolverConfig:
     eta_inner: float = 0.05       # OMD-RT step on φ (eq. (22))
     inner_iters: int = 50         # oracle steps per observation (nested)
     grad_mode: GradMode = "sampled"  # outer gradient estimator (§16.2)
+    telemetry: int = 0            # obs ring capacity; 0 = recording off (§18)
 
     def __post_init__(self):
         if self.method not in METHODS:
@@ -101,6 +108,10 @@ class SolverConfig:
         if self.inner_iters < 1:
             raise ValueError(
                 f"inner_iters must be >= 1, got {self.inner_iters}")
+        if self.telemetry < 0:
+            raise ValueError(
+                f"telemetry (ring capacity) must be >= 0, got "
+                f"{self.telemetry}")
 
     @property
     def oracle_iters(self) -> int:
@@ -179,6 +190,7 @@ class Result(NamedTuple):
     cost_traj: Array              # [T] network cost at the committed iterates
     grad_traj: Array              # [T, W] gradient estimates
     state: SolverState            # final state — thread into the next run
+    telemetry: Any = None         # obs ring when config.telemetry > 0 (§18)
 
 
 # ---------------------------------------------------------------------------
@@ -409,7 +421,8 @@ def _learned_step(problem: Problem, config: SolverConfig, state: SolverState,
 
 
 def step(problem: Problem, config: SolverConfig, state: SolverState,
-         task_utilities: Array) -> tuple[SolverState, StepInfo]:
+         task_utilities: Array, telemetry=None
+         ) -> tuple[SolverState, StepInfo] | tuple:
     """One fused outer iteration of GS-OMA/OMAD on the current iterates.
 
     ``task_utilities`` is the [2W] vector of *task* utilities Σ_w u_w(λ_w)
@@ -427,15 +440,50 @@ def step(problem: Problem, config: SolverConfig, state: SolverState,
     by one analytic gradient through the implicit routing layer
     (``task_utilities`` is ignored — pass zeros); the dispatch is static,
     so each mode compiles its own lean program.
+
+    With ``telemetry`` (a ``repro.obs.Telemetry`` ring — only meaningful
+    when ``config.telemetry > 0`` sized it) the committed iterates are
+    recorded into the ring *inside* the step (pure, donation-friendly,
+    DESIGN.md §18.1) and a third return value carries the updated ring.
     """
-    if config.grad_mode == "learned":
-        return _learned_step(problem, config, state, task_utilities)
     graph = problem.graph
-    itemsize = 2 if dispatch.megakernel_phi_dtype() == "bfloat16" else 4
-    if dispatch.use_megakernel(graph.n_bar, graph.n_sessions, itemsize):
-        return _megakernel_step(problem, config, state, task_utilities)
-    return _sampled_step(problem, config, state, task_utilities,
-                         config.eta_outer, config.eta_inner)
+    if config.grad_mode == "learned":
+        mode, oracle_calls = "learned", 2
+        out = _learned_step(problem, config, state, task_utilities)
+    else:
+        itemsize = 2 if dispatch.megakernel_phi_dtype() == "bfloat16" else 4
+        if dispatch.use_megakernel(graph.n_bar, graph.n_sessions, itemsize):
+            mode = "megakernel"
+            out = _megakernel_step(problem, config, state, task_utilities)
+        else:
+            mode = "sampled"
+            out = _sampled_step(problem, config, state, task_utilities,
+                                config.eta_outer, config.eta_inner)
+        oracle_calls = 2 * graph.n_sessions + 1
+    _trace_dispatch(mode, graph)
+    if telemetry is None:
+        return out
+    from repro.obs import telemetry as _tel
+
+    st, info = out
+    tel = _tel.record(telemetry, st, info, lam_total=problem.lam_total,
+                      delta=config.delta, oracle_calls=oracle_calls)
+    return st, info, tel
+
+
+def _trace_dispatch(mode: str, graph) -> None:
+    """Emit the dispatch decision on the installed obs tracer (no-op
+    without one).  Runs at *trace* time — once per compilation, which is
+    exactly when the decision is made; jitted steady-state intervals
+    never reach here (DESIGN.md §18.3)."""
+    from repro.obs import trace as _trace
+
+    if _trace.current_tracer() is not None:
+        _trace.instant(
+            f"solver.dispatch:{mode}", cat="dispatch",
+            args={"mode": mode, "n_bar": int(graph.n_bar),
+                  "n_sessions": int(graph.n_sessions),
+                  "sparse": isinstance(graph, CECGraphSparse)})
 
 
 def step_with_etas(problem: Problem, config: SolverConfig,
@@ -474,6 +522,11 @@ def run(problem: Problem, config: SolverConfig, *, iters: int,
     (``Result.state``), which is how the scenario engine crosses segment
     boundaries.  A dense problem that auto-sparsifies still returns dense
     ``phi``/``state`` — the representation never leaks to the caller.
+
+    With ``config.telemetry > 0`` a fresh obs ring of that capacity is
+    threaded through the scan — recorded by ``step``, utility-annotated
+    device-side at the committed Λ — and returned on
+    ``Result.telemetry`` (DESIGN.md §18.1).
     """
     bank = problem.bank
     has_surrogate = (problem.util_family is not None
@@ -514,7 +567,15 @@ def run(problem: Problem, config: SolverConfig, *, iters: int,
     record_value = (bank.total if bank is not None
                     else _task_value_fn(prob))
 
-    def outer(st, _):
+    if config.telemetry > 0:
+        from repro.obs import telemetry as _obs_tel
+
+        tel0 = _obs_tel.init_ring(config.telemetry, W)
+    else:
+        _obs_tel, tel0 = None, None
+
+    def outer(carry, _):
+        st, tel = carry
         if config.grad_mode == "learned":
             # the surrogate replaces the perturbation sweep — no bank
             # evaluations, and step ignores the zeros
@@ -522,22 +583,30 @@ def run(problem: Problem, config: SolverConfig, *, iters: int,
         else:
             task_u = jax.vmap(bank.total)(
                 perturbed_allocations(st.lam, config.delta))
-        st, info = step(prob, config, st, task_u)
+        if tel is None:
+            st, info = step(prob, config, st, task_u)
+        else:
+            st, info, tel = step(prob, config, st, task_u, tel)
         # the recorded U_t is the paper's U(Λ^t, φ^t): task utility and
         # network cost both evaluated at the *committed* iterates, not at
         # the last perturbed observation
         U_t = record_value(st.lam) - info.cost
-        return st, (U_t, st.lam, info.cost, info.grad)
+        if tel is not None:
+            # the ring's utility column is NaN-seeded by record (a jitted
+            # step cannot know the task side); here the bank is visible,
+            # so annotate device-side within the same scan iteration
+            tel = _obs_tel.annotate(tel, utility=U_t)
+        return (st, tel), (U_t, st.lam, info.cost, info.grad)
 
-    st, (u_traj, lam_traj, cost_traj, grad_traj) = jax.lax.scan(
-        outer, st, None, length=iters)
+    (st, tel), (u_traj, lam_traj, cost_traj, grad_traj) = jax.lax.scan(
+        outer, (st, tel0), None, length=iters)
     if converted:
         from . import sparse as _sparse
 
         st = st._replace(phi=_sparse.phi_to_dense(prob.graph, st.phi))
     return Result(lam=st.lam, phi=st.phi, utility_traj=u_traj,
                   lam_traj=lam_traj, cost_traj=cost_traj,
-                  grad_traj=grad_traj, state=st)
+                  grad_traj=grad_traj, state=st, telemetry=tel)
 
 
 # ---------------------------------------------------------------------------
@@ -546,6 +615,16 @@ def run(problem: Problem, config: SolverConfig, *, iters: int,
 
 @functools.lru_cache(maxsize=None)
 def _fused_step(config: SolverConfig, donate: bool, _dispatch_key):
+    if config.telemetry > 0:
+        def fn(problem: Problem, state: SolverState, task_utilities: Array,
+               telemetry):
+            return step(problem, config, state, task_utilities, telemetry)
+
+        # donate the iterates AND the ring: both are replaced wholesale
+        # every interval, so XLA reuses their buffers in place and the
+        # recording steady state allocates nothing (DESIGN.md §18.1)
+        return jax.jit(fn, donate_argnums=(1, 3) if donate else ())
+
     def fn(problem: Problem, state: SolverState, task_utilities: Array):
         return step(problem, config, state, task_utilities)
 
@@ -556,7 +635,11 @@ def fused_step(config: SolverConfig, *, donate: bool = False):
     """``jit(step)`` with ``config`` static, cached on its knobs.
 
     Returns ``fn(problem, state, task_utilities) -> (SolverState,
-    StepInfo)``.  ``problem`` and ``state`` are pytree arguments, so
+    StepInfo)`` — or, with ``config.telemetry > 0``, ``fn(problem,
+    state, task_utilities, telemetry) -> (SolverState, StepInfo,
+    Telemetry)``: the obs ring rides the jit as a fourth pytree argument
+    and is donated alongside the state (DESIGN.md §18.1).
+    ``problem`` and ``state`` are pytree arguments, so
     same-shape topology changes (the scenario engine's stable-index
     churn) reuse the compiled executable and demand shifts
     (``problem.lam_total`` — a traced leaf) never retrace.  The cache is

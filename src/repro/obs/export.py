@@ -1,0 +1,121 @@
+"""Host-side telemetry export (DESIGN.md §18.3).
+
+The one place device-resident observability crosses to the host:
+
+* :func:`export_ring` — sync a :class:`Telemetry` ring (or a fleet-
+  stacked one) to numpy, valid rows only, chronological order;
+* :func:`metrics_rows` / :func:`write_metrics_jsonl` — flatten a ring
+  (plus optional monitor verdicts) into JSON-lines records aligned with
+  the perf-trajectory row schema (``benchmarks/run.py``: one JSON object
+  per line, ``name``/scalar fields, nothing nested that a trajectory
+  reader would have to special-case);
+* :func:`write_chrome_trace` — serialize an installed/passed
+  :class:`~repro.obs.trace.Tracer` next to the metrics.
+
+Everything here blocks on device values — by design.  The control loop
+never calls this module; benchmarks, CI smoke and operators do, at
+whatever cadence they can afford.
+"""
+from __future__ import annotations
+
+import json
+import math
+import pathlib
+from typing import Any
+
+import numpy as np
+
+from . import trace as _trace
+from .telemetry import Telemetry, Verdict, order
+
+_COLUMNS = ("utility", "lam", "cost", "grad_norm", "proj_residual",
+            "oracle_calls", "wall_clock_us")
+
+
+def export_ring(tel: Telemetry) -> dict[str, np.ndarray]:
+    """Sync the ring to host numpy: ``{column: [count, ...]}`` oldest →
+    newest, invalid (unwritten) slots dropped.
+
+    Accepts a fleet-stacked ring (leaves ``[K, C, ...]``, per-lane
+    ``head``/``count``) and returns ``[K, count_min, ...]`` arrays
+    truncated to the shortest lane — lanes step in lockstep under
+    ``fused_step_batch``, so in practice counts agree.
+    """
+    head = np.asarray(tel.head)
+    if head.ndim == 0:
+        idx, valid = order(tel)
+        idx = np.asarray(idx)[np.asarray(valid)]
+        return {c: np.asarray(getattr(tel, c))[idx] for c in _COLUMNS}
+    # fleet-stacked: python-loop the K lanes (host-side, export cadence)
+    lanes = []
+    for k in range(head.shape[0]):
+        lane = Telemetry(
+            **{c: getattr(tel, c)[k] for c in _COLUMNS},
+            head=tel.head[k], count=tel.count[k], capacity=tel.capacity)
+        lanes.append(export_ring(lane))
+    n = min(lane["utility"].shape[0] for lane in lanes)
+    return {c: np.stack([lane[c][:n] for lane in lanes]) for c in _COLUMNS}
+
+
+def _scalarize(x) -> Any:
+    v = np.asarray(x)
+    if v.ndim == 0:
+        f = v.item()
+        if isinstance(f, float) and not math.isfinite(f):
+            return None                       # JSON has no NaN/inf
+        return f
+    return [_scalarize(e) for e in v]
+
+
+def metrics_rows(tel: Telemetry, *, verdicts: dict[str, Verdict] | None = None,
+                 name: str = "obs") -> list[dict[str, Any]]:
+    """JSON-lines records: one per recorded interval, trajectory-schema
+    style (flat ``name``/``t``/scalar columns, λ as a list), plus one
+    trailing ``{name}.verdicts`` record when monitor output is given."""
+    cols = export_ring(tel)
+    if cols["utility"].ndim > 1:
+        raise ValueError(
+            "metrics_rows flattens one ring; export fleet-stacked rings "
+            "lane-by-lane (export_ring accepts them) and tag each lane")
+    n = cols["utility"].shape[0]
+    t0 = int(np.asarray(tel.head)) - n
+    rows = []
+    for i in range(n):
+        rows.append({
+            "name": name, "t": t0 + i,
+            **{c: _scalarize(cols[c][i]) for c in _COLUMNS},
+        })
+    if verdicts is not None:
+        rows.append({
+            "name": f"{name}.verdicts",
+            **{k: {"value": _scalarize(v.value),
+                   "warn": bool(np.asarray(v.warn).any()),
+                   "trip": bool(np.asarray(v.trip).any())}
+               for k, v in sorted(verdicts.items())},
+        })
+    return rows
+
+
+def write_metrics_jsonl(path, tel: Telemetry, *,
+                        verdicts: dict[str, Verdict] | None = None,
+                        name: str = "obs") -> pathlib.Path:
+    """Write :func:`metrics_rows` as JSON lines; returns the path."""
+    p = pathlib.Path(path)
+    p.parent.mkdir(parents=True, exist_ok=True)
+    with p.open("w") as fh:
+        for row in metrics_rows(tel, verdicts=verdicts, name=name):
+            fh.write(json.dumps(row) + "\n")
+    return p
+
+
+def write_chrome_trace(path, tracer: _trace.Tracer | None = None
+                       ) -> pathlib.Path:
+    """Serialize ``tracer`` (default: the installed one) as Chrome
+    trace-event JSON.  Raises if there is nothing to write — a silent
+    empty trace would read as 'nothing happened'."""
+    tracer = tracer if tracer is not None else _trace.current_tracer()
+    if tracer is None:
+        raise ValueError(
+            "no tracer passed and none installed — obs.install_tracer() "
+            "before the run you want a timeline of")
+    return tracer.write(path)

@@ -1,0 +1,140 @@
+"""Control-plane tracing — Chrome trace-event timelines (DESIGN.md §18.3).
+
+A :class:`Tracer` collects host-side *trace events* — control intervals,
+scenario segments and their churn events, kernel-dispatch decisions —
+and serializes them as Chrome trace-event JSON (the ``chrome://tracing``
+/ Perfetto format: a ``{"traceEvents": [...]}`` object whose entries
+carry ``name``/``cat``/``ph``/``ts``/``pid``/``tid``).  Two phases are
+emitted: complete spans (``ph: "X"`` with ``ts``+``dur``) and instants
+(``ph: "i"``).
+
+The tracer is strictly host-side and strictly optional: the module-level
+:func:`span`/:func:`instant` helpers no-op when no tracer is installed,
+so instrumented call sites (``run_scenario`` segment boundaries,
+``CECRouter.control_step`` intervals, ``solver.step``'s dispatch choice)
+cost one global read when tracing is off.  Dispatch instants fire at
+*trace* time — once per compilation, which is exactly when a dispatch
+decision is made; steady-state jitted intervals never touch the tracer.
+
+Timestamps are ``time.perf_counter`` microseconds relative to tracer
+construction.  ``tid`` is assigned per category on first use so each
+category renders as its own row in the viewer.
+
+Like :mod:`repro.obs.telemetry`, this module must stay importable from
+``repro.core`` — stdlib only, no core imports.
+"""
+from __future__ import annotations
+
+import contextlib
+import json
+import pathlib
+import time
+from typing import Any, Iterator
+
+TRACE_EVENT_KEYS = ("name", "cat", "ph", "ts", "pid", "tid")
+
+
+class Tracer:
+    """Accumulates trace events; write with :meth:`write` / :meth:`to_chrome`.
+
+    Not thread-safe by design — the control plane is a single host loop
+    (one interval at a time); a fleet wanting per-worker timelines
+    installs one tracer per process (``pid`` disambiguates on merge).
+    """
+
+    def __init__(self, *, pid: int = 0) -> None:
+        self.events: list[dict[str, Any]] = []
+        self.pid = int(pid)
+        self._t0 = time.perf_counter()
+        self._tids: dict[str, int] = {}
+
+    # -- low-level emitters ------------------------------------------------
+    def _now_us(self) -> float:
+        return (time.perf_counter() - self._t0) * 1e6
+
+    def _tid(self, cat: str) -> int:
+        return self._tids.setdefault(cat, len(self._tids))
+
+    def instant(self, name: str, *, cat: str = "event",
+                args: dict[str, Any] | None = None) -> None:
+        self.events.append({
+            "name": name, "cat": cat, "ph": "i", "s": "t",
+            "ts": self._now_us(), "pid": self.pid, "tid": self._tid(cat),
+            "args": dict(args or {}),
+        })
+
+    @contextlib.contextmanager
+    def span(self, name: str, *, cat: str = "interval",
+             args: dict[str, Any] | None = None) -> Iterator[None]:
+        ts = self._now_us()
+        try:
+            yield
+        finally:
+            self.events.append({
+                "name": name, "cat": cat, "ph": "X",
+                "ts": ts, "dur": self._now_us() - ts,
+                "pid": self.pid, "tid": self._tid(cat),
+                "args": dict(args or {}),
+            })
+
+    # -- serialization -----------------------------------------------------
+    def to_chrome(self) -> dict[str, Any]:
+        """The trace-event JSON object (``traceEvents`` sorted by ts)."""
+        return {
+            "traceEvents": sorted(self.events, key=lambda e: e["ts"]),
+            "displayTimeUnit": "ms",
+            "otherData": {"format": "repro.obs.trace", "version": 1},
+        }
+
+    def write(self, path) -> pathlib.Path:
+        """Serialize to ``path``; open the file in ``chrome://tracing`` or
+        https://ui.perfetto.dev to see the timeline."""
+        p = pathlib.Path(path)
+        p.parent.mkdir(parents=True, exist_ok=True)
+        p.write_text(json.dumps(self.to_chrome(), indent=1))
+        return p
+
+
+# ---------------------------------------------------------------------------
+# the installed tracer — module-global so call sites need no plumbing
+# ---------------------------------------------------------------------------
+
+_TRACER: Tracer | None = None
+
+
+def install_tracer(tracer: Tracer | None = None) -> Tracer:
+    """Install (and return) the process-wide tracer.  Instrumented call
+    sites start emitting immediately; install before building routers if
+    you want their compile-time dispatch instants."""
+    global _TRACER
+    _TRACER = tracer if tracer is not None else Tracer()
+    return _TRACER
+
+
+def uninstall_tracer() -> Tracer | None:
+    """Remove and return the installed tracer (idempotent)."""
+    global _TRACER
+    t, _TRACER = _TRACER, None
+    return t
+
+
+def current_tracer() -> Tracer | None:
+    return _TRACER
+
+
+def instant(name: str, *, cat: str = "event",
+            args: dict[str, Any] | None = None) -> None:
+    """Emit an instant on the installed tracer; no-op when none is."""
+    if _TRACER is not None:
+        _TRACER.instant(name, cat=cat, args=args)
+
+
+@contextlib.contextmanager
+def span(name: str, *, cat: str = "interval",
+         args: dict[str, Any] | None = None) -> Iterator[None]:
+    """Span on the installed tracer; transparent no-op when none is."""
+    if _TRACER is None:
+        yield
+    else:
+        with _TRACER.span(name, cat=cat, args=args):
+            yield

@@ -51,6 +51,7 @@ two to ≤1e-5 parity.
 from __future__ import annotations
 
 import dataclasses
+import time
 
 import jax.numpy as jnp
 import numpy as np
@@ -130,6 +131,7 @@ class CECRouter:
     config: SolverConfig | None = None
     grad_policy: str = "sampled"
     util_family: str | None = None
+    telemetry: int = 0
 
     def __post_init__(self):
         if self.grad_policy not in GRAD_POLICIES:
@@ -142,13 +144,21 @@ class CECRouter:
                 method=method, delta=float(self.delta),
                 eta_outer=float(self.eta_outer),
                 eta_inner=float(self.eta_inner),
-                inner_iters=int(self.inner_iters))
+                inner_iters=int(self.inner_iters),
+                telemetry=int(self.telemetry))
         else:
             # keep the legacy attribute reads truthful
+            if self.telemetry and self.config.telemetry != self.telemetry:
+                # the router-level knob wins: sizing the ring at the
+                # router is the ergonomic path (the config is often a
+                # shared preset)
+                self.config = self.config.replace(
+                    telemetry=int(self.telemetry))
             self.delta = self.config.delta
             self.eta_outer = self.config.eta_outer
             self.eta_inner = self.config.eta_inner
             self.inner_iters = self.config.oracle_iters
+        self.telemetry = self.config.telemetry
         # one Problem: representation policy + demand as a traced leaf
         # (Problem.canonical is the same conversion every entry point uses;
         # strong-float32 demand so the fused step never retraces on it)
@@ -158,6 +168,13 @@ class CECRouter:
             cost=resolve_cost(self.cost_name)).canonical().validate()
         self.graph = self.problem.graph
         self.state: SolverState = _solver.init(self.problem, self.config)
+        if self.telemetry > 0:
+            from repro.obs import telemetry as _obs_tel
+
+            self.tel = _obs_tel.init_ring(self.telemetry,
+                                          self.graph.n_sessions)
+        else:
+            self.tel = None
         self.history: list[dict] = []
         self.fitter: OnlineFitter | None = None
         self._migrated = False
@@ -205,38 +222,79 @@ class CECRouter:
         — is a single jitted ``solver.fused_step`` call; the
         ``SolverState`` never leaves the device.
         """
+        from repro.obs import trace as _obs_trace
+
         mode = self._grad_mode_now()
         W = self.graph.n_sessions
-        if mode == "learned":
-            self._migrated = True
-            prob = self.problem.with_utilities(self.util_family,
-                                               self.fitter.params)
-            cfg = self.config.replace(grad_mode="learned")
-            self.state, info = _solver.fused_step(cfg)(
-                prob, self.state, jnp.zeros((2 * W,), jnp.float32))
-            oracle_calls = 1
-        else:
-            pert = _solver.perturbed_allocations(self.state.lam,
-                                                 self.config.delta)
-            task_u = jnp.asarray(_call_utility(utility_fn, np.asarray(pert)))
-            self.state, info = _solver.fused_step(self.config)(
-                self.problem, self.state, task_u)
+        with _obs_trace.span("router.interval", cat="interval",
+                             args={"t": len(self.history), "mode": mode}):
+            t0 = time.perf_counter()
+            if mode == "learned":
+                self._migrated = True
+                prob = self.problem.with_utilities(self.util_family,
+                                                   self.fitter.params)
+                cfg = self.config.replace(grad_mode="learned")
+                fused = _solver.fused_step(cfg)
+                if self.tel is None:
+                    self.state, info = fused(
+                        prob, self.state, jnp.zeros((2 * W,), jnp.float32))
+                else:
+                    self.state, info, self.tel = fused(
+                        prob, self.state, jnp.zeros((2 * W,), jnp.float32),
+                        self.tel)
+                oracle_calls = 1
+            else:
+                pert = _solver.perturbed_allocations(self.state.lam,
+                                                     self.config.delta)
+                task_u = jnp.asarray(
+                    _call_utility(utility_fn, np.asarray(pert)))
+                fused = _solver.fused_step(self.config)
+                if self.tel is None:
+                    self.state, info = fused(self.problem, self.state,
+                                             task_u)
+                else:
+                    self.state, info, self.tel = fused(
+                        self.problem, self.state, task_u, self.tel)
+                if self.fitter is not None:
+                    self.fitter.add(np.asarray(pert), np.asarray(task_u))
+                oracle_calls = 2 * W + 1
+            solver_us = (time.perf_counter() - t0) * 1e6
+            u_task = float(
+                _call_utility(utility_fn,
+                              np.asarray(self.state.lam)[None])[0])
             if self.fitter is not None:
-                self.fitter.add(np.asarray(pert), np.asarray(task_u))
-            oracle_calls = 2 * W + 1
-        u_task = float(
-            _call_utility(utility_fn, np.asarray(self.state.lam)[None])[0])
-        if self.fitter is not None:
-            self.fitter.observe_live(np.asarray(self.state.lam), u_task)
-            self.fitter.maybe_fit()
-        rec = {"lam": np.asarray(self.state.lam).copy(),
-               "cost": float(info.cost),
-               "utility": u_task - float(info.cost),
-               "grad": np.asarray(info.grad).copy(),
-               "mode": mode,
-               "oracle_calls": oracle_calls}
-        self.history.append(rec)
+                self.fitter.observe_live(np.asarray(self.state.lam), u_task)
+                self.fitter.maybe_fit()
+            rec = {"lam": np.asarray(self.state.lam).copy(),
+                   "cost": float(info.cost),
+                   "utility": u_task - float(info.cost),
+                   "grad": np.asarray(info.grad).copy(),
+                   "mode": mode,
+                   "oracle_calls": oracle_calls}
+            if self.tel is not None:
+                # patch the row the jitted step NaN-seeded: the measured
+                # net utility and the host-observed solver wall-clock
+                # (dispatch-inclusive — the control loop's real budget)
+                from repro.obs import telemetry as _obs_tel
+
+                self.tel = _obs_tel.annotate_donated(
+                    self.tel, utility=jnp.float32(rec["utility"]),
+                    wall_clock_us=jnp.float32(solver_us))
+            self.history.append(rec)
         return rec
+
+    def verdicts(self, comparator=None) -> dict:
+        """Run the paper-invariant monitors on the live iterates (and the
+        telemetry ring when one is enabled): flow conservation, capacity
+        slack, Theorem-3 KKT gap, plus the ring's monotone-descent and
+        budget-feasibility checks — ``repro.obs.monitors.check_state``
+        with default thresholds (DESIGN.md §18.2).  Host-blocking in the
+        sense that the caller will read the verdict arrays; the monitors
+        themselves are pure jnp."""
+        from repro.obs import monitors as _monitors
+
+        return _monitors.check_state(self.problem, self.state, self.tel,
+                                     comparator=comparator)
 
     # -- dispatch interfaces used by the engine ------------------------------
     def admission_split(self) -> np.ndarray:
@@ -316,6 +374,11 @@ class CECRouter:
         does.  Returns the post-event state — thread it into the next
         call.  Bank swaps change only the *measured* utility (the
         environment), so the router's iterates carry over untouched."""
+        from repro.obs import trace as _obs_trace
+
+        _obs_trace.instant(f"event:{event.kind}", cat="scenario",
+                           args={"kind": event.kind,
+                                 "at": len(self.history)})
         new_state = apply_event(state, event)
         if isinstance(event, DemandShift):
             self.on_demand_change(new_state.lam_total)

@@ -42,6 +42,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import time
 from typing import Sequence
 
 import jax
@@ -75,6 +76,7 @@ class FleetView:
 
     lam: jax.Array       # [K, W] committed admission splits
     weights: jax.Array   # [K, W, n_phys] replica dispatch weights
+    verdicts: dict | None = None   # {monitor: Verdict([K] leaves)} — §18.2
 
     @property
     def n_tenants(self) -> int:
@@ -91,24 +93,42 @@ class FleetView:
 
 
 @functools.lru_cache(maxsize=None)
-def _publisher(_key):
+def _publisher(_key, cost_name: str | None = None):
     """Jitted front-buffer builder: (Λ copy, replica weights) per tenant.
 
     ``state.lam + 0.0`` is a real XLA computation, so the published Λ is
     a fresh buffer — bit-identical in value (Λ ≥ δ > 0, no signed-zero
     corner) but never aliased to the donated working state.  The weights
     math is ``CECRouter.replica_weights`` vmapped over tenants.
+
+    With ``cost_name`` set (a telemetry-enabled fleet) the publish also
+    runs the fleet-vmapped paper-invariant monitors
+    (``repro.obs.monitors.fleet_verdicts``, DESIGN.md §18.2) in the same
+    jitted call — verdicts ride the front buffer as [K]-leaf pytrees, so
+    reading them costs no extra dispatch.
     """
 
-    def fn(graph, state):
+    def weights_of(graph, state):
         def one(g, lam, phi):
             t = propagate(g, phi, lam)
             shares = t[:, : g.n_phys] * g.deploy.astype(t.dtype)
             tot = shares.sum(-1, keepdims=True)
             return shares / jnp.where(tot > 0, tot, 1.0)
 
-        weights = jax.vmap(one)(graph, state.lam, state.phi)
-        return state.lam + 0.0, weights
+        return jax.vmap(one)(graph, state.lam, state.phi)
+
+    if cost_name is None:
+        def fn(graph, state):
+            return state.lam + 0.0, weights_of(graph, state)
+
+        return jax.jit(fn)
+
+    from repro.obs import monitors as _monitors
+
+    def fn(graph, state, lam_totals, tel):
+        verdicts = _monitors.fleet_verdicts(graph, lam_totals, state, tel,
+                                            cost=cost_name)
+        return state.lam + 0.0, weights_of(graph, state), verdicts
 
     return jax.jit(fn)
 
@@ -133,7 +153,7 @@ class RouterFleet:
                  config: SolverConfig | None = None, donate: bool = True,
                  n_phys: int | None = None, depth_max: int | None = None,
                  grad_policy: str = "sampled",
-                 util_family: str | None = None):
+                 util_family: str | None = None, telemetry: int = 0):
         if grad_policy not in GRAD_POLICIES:
             raise ValueError(f"grad_policy must be one of {GRAD_POLICIES}; "
                              f"got {grad_policy!r}")
@@ -162,6 +182,10 @@ class RouterFleet:
         self.cost_name = cost_name
         self.config = config if config is not None \
             else _solver.serving_defaults()
+        if telemetry and self.config.telemetry != telemetry:
+            # like CECRouter: the fleet-level ring knob wins over a
+            # shared preset config
+            self.config = self.config.replace(telemetry=int(telemetry))
         self.donate = bool(donate)
         K, W = self.batch.n_instances, self.batch.n_sessions
         # stacked iterates == vmap of solver.init over tenants
@@ -170,6 +194,15 @@ class RouterFleet:
                             jnp.float32),
             phi=self.batch.uniform_phi(),
             t=jnp.zeros((K,), jnp.int32))
+        if self.config.telemetry > 0:
+            from repro.obs import telemetry as _obs_tel
+
+            cap = self.config.telemetry
+            # [K]-stacked fresh rings: vmap broadcasts one init over lanes
+            self.tel = jax.vmap(
+                lambda _: _obs_tel.init_ring(cap, W))(jnp.zeros((K,)))
+        else:
+            self.tel = None
         self.history: list[dict] = []
         # live sampled→learned migration (DESIGN.md §16.4): one fitter per
         # tenant; the switch is all-or-nothing because the fleet step is one
@@ -215,8 +248,16 @@ class RouterFleet:
 
     def _publish(self):
         graph = self.batch.stacked_graph()
-        lam, weights = _publisher(_dispatch_key())(graph, self.state)
-        self._view = FleetView(lam=lam, weights=weights)
+        if self.tel is None:
+            lam, weights = _publisher(_dispatch_key())(graph, self.state)
+            self._view = FleetView(lam=lam, weights=weights)
+        else:
+            lam, weights, verdicts = _publisher(
+                _dispatch_key(), self.cost_name)(
+                    graph, self.state, jnp.asarray(self.lam_totals),
+                    self.tel)
+            self._view = FleetView(lam=lam, weights=weights,
+                                   verdicts=verdicts)
 
     # -- measured utilities -------------------------------------------------
     def _measure(self, utility_fn, lams: np.ndarray) -> np.ndarray:
@@ -264,51 +305,83 @@ class RouterFleet:
         params threaded through ``fused_step_batch`` as a data leaf
         (refits never retrace; DESIGN.md §16.4).
         """
+        from repro.obs import trace as _obs_trace
+
         mode = self._grad_mode_now()
         K, W = self.n_tenants, self.n_sessions
-        if mode == "learned":
-            self._migrated = True
-            params = jnp.stack([f.params for f in self.fitters])
-            step = fused_step_batch(
-                self.config.replace(grad_mode="learned"),
-                cost=self.cost_name, donate=self.donate,
-                util_family=self.util_family)
-            self.state, info = step(
-                self.batch.stacked_graph(), jnp.asarray(self.lam_totals),
-                self.state, jnp.zeros((K, 2 * W), jnp.float32), params)
-            oracle_calls = 1
-        else:
-            delta = self.config.delta
-            pert = jax.vmap(lambda l: _solver.perturbed_allocations(
-                l, delta))(self._view.lam)
-            pert = np.asarray(pert)
-            task_u = self._measure(utility_fn, pert)
-            step = fused_step_batch(self.config, cost=self.cost_name,
-                                    donate=self.donate)
-            self.state, info = step(
-                self.batch.stacked_graph(),
-                jnp.asarray(self.lam_totals),
-                self.state, jnp.asarray(task_u))
+        with _obs_trace.span("fleet.interval", cat="interval",
+                             args={"t": len(self.history), "mode": mode,
+                                   "tenants": K}):
+            t0 = time.perf_counter()
+            if mode == "learned":
+                self._migrated = True
+                params = jnp.stack([f.params for f in self.fitters])
+                step = fused_step_batch(
+                    self.config.replace(grad_mode="learned"),
+                    cost=self.cost_name, donate=self.donate,
+                    util_family=self.util_family)
+                zeros = jnp.zeros((K, 2 * W), jnp.float32)
+                if self.tel is None:
+                    self.state, info = step(
+                        self.batch.stacked_graph(),
+                        jnp.asarray(self.lam_totals), self.state, zeros,
+                        params)
+                else:
+                    self.state, info, self.tel = step(
+                        self.batch.stacked_graph(),
+                        jnp.asarray(self.lam_totals), self.state, zeros,
+                        self.tel, params)
+                oracle_calls = 1
+            else:
+                delta = self.config.delta
+                pert = jax.vmap(lambda l: _solver.perturbed_allocations(
+                    l, delta))(self._view.lam)
+                pert = np.asarray(pert)
+                task_u = self._measure(utility_fn, pert)
+                step = fused_step_batch(self.config, cost=self.cost_name,
+                                        donate=self.donate)
+                if self.tel is None:
+                    self.state, info = step(
+                        self.batch.stacked_graph(),
+                        jnp.asarray(self.lam_totals),
+                        self.state, jnp.asarray(task_u))
+                else:
+                    self.state, info, self.tel = step(
+                        self.batch.stacked_graph(),
+                        jnp.asarray(self.lam_totals),
+                        self.state, jnp.asarray(task_u), self.tel)
+                if self.fitters is not None:
+                    for k, f in enumerate(self.fitters):
+                        f.add(pert[k], task_u[k])
+                oracle_calls = 2 * W + 1
+            solver_us = (time.perf_counter() - t0) * 1e6
+            # measure at the committed Λ (the step's fresh output — value-
+            # identical to the view published below, which happens after
+            # the ring annotation so the verdicts see this interval's U)
+            u_task = self._measure(
+                utility_fn, np.asarray(self.state.lam)[:, None, :])[:, 0]
             if self.fitters is not None:
+                lam = np.asarray(self._view.lam)
                 for k, f in enumerate(self.fitters):
-                    f.add(pert[k], task_u[k])
-            oracle_calls = 2 * W + 1
-        self._publish()
-        u_task = self._measure(
-            utility_fn, np.asarray(self._view.lam)[:, None, :])[:, 0]
-        if self.fitters is not None:
-            lam = np.asarray(self._view.lam)
-            for k, f in enumerate(self.fitters):
-                f.observe_live(lam[k], float(u_task[k]))
-                f.maybe_fit()
-        cost = np.asarray(info.cost, np.float32)
-        rec = {"lam": np.asarray(self._view.lam).copy(),
-               "cost": cost,
-               "utility": u_task - cost,
-               "grad": np.asarray(info.grad).copy(),
-               "mode": mode,
-               "oracle_calls": oracle_calls}
-        self.history.append(rec)
+                    f.observe_live(lam[k], float(u_task[k]))
+                    f.maybe_fit()
+            cost = np.asarray(info.cost, np.float32)
+            if self.tel is not None:
+                # per-lane net utility; one fused call serves all K
+                # lanes, so they share the measured wall-clock
+                from repro.obs import telemetry as _obs_tel
+
+                self.tel = _obs_tel.annotate_donated(
+                    self.tel, utility=jnp.asarray(u_task - cost),
+                    wall_clock_us=jnp.full((K,), solver_us, jnp.float32))
+            self._publish()
+            rec = {"lam": np.asarray(self._view.lam).copy(),
+                   "cost": cost,
+                   "utility": u_task - cost,
+                   "grad": np.asarray(info.grad).copy(),
+                   "mode": mode,
+                   "oracle_calls": oracle_calls}
+            self.history.append(rec)
         return rec
 
     # -- churn --------------------------------------------------------------

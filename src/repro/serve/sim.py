@@ -55,6 +55,7 @@ class SimReport(NamedTuple):
     goodput: np.ndarray      # [W] final per-version goodput estimate
     events: list             # [(interval, event kind), ...] as fired
     tokens_served: int       # total decode tokens across all engines
+    verdicts: dict | None = None   # end-of-run monitor verdicts (§18.2)
 
 
 @dataclasses.dataclass
@@ -86,6 +87,7 @@ class ServingSim:
     config: SolverConfig | None = None     # overrides the three knobs above
     grad_policy: str = "sampled"           # sampled | learned | auto (§16.4)
     util_family: str | None = None         # surrogate family for the fitter
+    telemetry: int = 0                     # obs ring capacity (§18); 0 = off
 
     def __post_init__(self):
         self.state: ScenarioState = initial_state(self.scenario, self.seed)
@@ -96,7 +98,8 @@ class ServingSim:
                                 delta=self.delta, eta_outer=self.eta_outer,
                                 eta_inner=self.eta_inner, config=self.config,
                                 grad_policy=self.grad_policy,
-                                util_family=self.util_family)
+                                util_family=self.util_family,
+                                telemetry=self.telemetry)
         self.config = self.router.config
         self.n_versions = self.state.deploy.shape[0]
         if self.quality is None:
@@ -154,18 +157,27 @@ class ServingSim:
         return tokens
 
     def run(self) -> SimReport:
+        from repro.obs import trace as _obs_trace
+
         u, lam_t, tok, fired = [], [], [], []
         for t in range(self.scenario.horizon):
             for ev in self._schedule.get(t, ()):
                 self.state = self.router.apply_scenario_event(self.state, ev)
                 fired.append((t, ev.kind))
-            tokens = self._serve_interval()
+            with _obs_trace.span("sim.serve", cat="serving",
+                                 args={"t": t}):
+                tokens = self._serve_interval()
             rec = self.router.control_step(self.measured_task_utility)
             u.append(rec["utility"])
             lam_t.append(rec["lam"])
             tok.append(tokens)
+        # end-of-run invariant sweep when the router records telemetry —
+        # the sim's report is the natural place operators look first
+        verdicts = (self.router.verdicts()
+                    if self.router.tel is not None else None)
         return SimReport(utility=np.asarray(u), lam=np.asarray(lam_t),
                          tokens=np.asarray(tok),
                          goodput=self.goodput.copy(), events=fired,
                          tokens_served=sum(e.tokens_served
-                                           for e in self.engines))
+                                           for e in self.engines),
+                         verdicts=verdicts)

@@ -8,6 +8,25 @@ import numpy as np
 import pytest
 
 
+@pytest.fixture(autouse=True, scope="module")
+def _bound_compiled_executable_state():
+    """Drop compiled executables at every test-module boundary.
+
+    A single -x -q run of the whole suite keeps every jitted executable
+    of every module alive in one process; past ~320 tests the
+    accumulated compiler state makes jaxlib's CPU backend_compile
+    segfault deterministically on the next large scan (observed on
+    jaxlib 0.4.36 — the faulting test is innocent and passes in any
+    shorter run).  Modules never share compiled artifacts on purpose
+    (cross-module caches are keyed on configs rebuilt per module), so
+    clearing between modules only costs recompiles, not correctness.
+    """
+    yield
+    import jax
+
+    jax.clear_caches()
+
+
 @pytest.fixture(scope="session")
 def small_cec():
     """A small feasible CEC instance shared across core tests."""

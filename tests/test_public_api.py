@@ -26,8 +26,8 @@ PINNED_SIGNATURES = {
     "init": "(problem: 'Problem', config: 'SolverConfig', *, phi0=None, "
             "lam0: 'Array | None' = None) -> 'SolverState'",
     "step": "(problem: 'Problem', config: 'SolverConfig', "
-            "state: 'SolverState', task_utilities: 'Array') "
-            "-> 'tuple[SolverState, StepInfo]'",
+            "state: 'SolverState', task_utilities: 'Array', telemetry=None) "
+            "-> 'tuple[SolverState, StepInfo] | tuple'",
     "run": "(problem: 'Problem', config: 'SolverConfig', *, iters: 'int', "
            "state: 'SolverState | None' = None, phi0=None, "
            "lam0: 'Array | None' = None) -> 'Result'",
@@ -99,16 +99,18 @@ PINNED_ALL = [
     "CECRouter", "InferenceEngine", "ServingSim",
     "core", "configs", "topo", "kernels", "serve", "parallel",
     "models", "train", "optim", "data", "launch", "roofline",
+    "obs",
 ]
 
 PINNED_SOLVER_CONFIG_FIELDS = (
-    "method", "delta", "eta_outer", "eta_inner", "inner_iters", "grad_mode")
+    "method", "delta", "eta_outer", "eta_inner", "inner_iters", "grad_mode",
+    "telemetry")
 PINNED_SOLVER_STATE_FIELDS = ("lam", "phi", "t")
 PINNED_RESULT_FIELDS = ("lam", "phi", "utility_traj", "lam_traj",
-                        "cost_traj", "grad_traj", "state")
+                        "cost_traj", "grad_traj", "state", "telemetry")
 PINNED_ROUTER_FIELDS = ("graph", "lam_total", "delta", "eta_outer",
                         "eta_inner", "inner_iters", "cost_name", "config",
-                        "grad_policy", "util_family")
+                        "grad_policy", "util_family", "telemetry")
 
 
 def test_repro_all_is_pinned():
